@@ -1,0 +1,74 @@
+"""Regenerate the EXPERIMENTS.md dry-run + roofline tables from
+results/dryrun/*.json (replaces the <!-- DRYRUN_TABLE --> and
+<!-- ROOFLINE_TABLE --> markers)."""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+
+from repro import configs
+from repro.roofline import report
+
+RESULTS = pathlib.Path("results/dryrun")
+EXP = pathlib.Path("EXPERIMENTS.md")
+
+
+def dryrun_table() -> str:
+    recs = report.load_records(RESULTS)
+    by_cell = {}
+    for r in recs:
+        by_cell.setdefault((r["arch"], r["shape"]), {})[r["mesh"]] = r
+    lines = ["| arch | shape | single (16,16) | multi (2,16,16) | "
+             "compile s | HBM GiB/dev |",
+             "|---|---|---|---|---|---|"]
+    n_ok = {"single": 0, "multi": 0}
+    for (arch, shape), ms in sorted(by_cell.items()):
+        cells = []
+        for mesh in ("single", "multi"):
+            r = ms.get(mesh, {})
+            st = r.get("status", "?")
+            if st == "ok":
+                n_ok[mesh] += 1
+            cells.append({"ok": "OK", "skipped": "skip",
+                          "error": "FAIL"}.get(st, "?"))
+        r = ms.get("single", {})
+        if r.get("status") == "ok":
+            mem = r["prod"]["memory"]
+            hbm = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0)) / 2**30
+            extra = [f"{r.get('compile_s', 0):.0f}", f"{hbm:.1f}"]
+        elif r.get("status") == "skipped":
+            extra = ["—", r.get("reason", "")[:40]]
+        else:
+            extra = ["—", "—"]
+        lines.append(f"| {arch} | {shape} | {cells[0]} | {cells[1]} | "
+                     f"{extra[0]} | {extra[1]} |")
+    lines.append("")
+    lines.append(f"**{n_ok['single']}/31 single-pod OK, "
+                 f"{n_ok['multi']}/31 multi-pod OK** "
+                 "(9 cells skipped per assignment rules).")
+    return "\n".join(lines)
+
+
+def _splice(text: str, name: str, content: str) -> str:
+    """Replace (or create from a bare marker) a START/END-delimited block."""
+    start, end = f"<!-- {name}_START -->", f"<!-- {name}_END -->"
+    block = f"{start}\n{content}\n{end}"
+    if start in text:
+        return re.sub(re.escape(start) + r".*?" + re.escape(end), 
+                      lambda _: block, text, flags=re.S)
+    return text.replace(f"<!-- {name} -->", block)
+
+
+def main() -> None:
+    roof = report.markdown_table(report.assemble(RESULTS, mesh="single"))
+    text = EXP.read_text()
+    text = _splice(text, "DRYRUN_TABLE", dryrun_table())
+    text = _splice(text, "ROOFLINE_TABLE", roof)
+    EXP.write_text(text)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Kernel microbenchmarks: wall-clock (CPU interpret, relative signal only)
+for the Pallas kernels at small shapes, plus TPU-v5e analytic estimates at
+the challenge shapes for the scientist's key genome variants."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KernelGenome
+from repro.core.evaluator import estimate_us
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # interpret-mode wall clock (small problem; relative only)
+    m = k = n = 256
+    a32 = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b32 = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    aq, a_s = ref.quantize_blockwise(a32)
+    bq, b_s = ref.quantize_blockwise_2d(b32)
+    rows.append(("micro/scaled_gemm_interp_us",
+                 _time(lambda *x: ops.scaled_gemm(*x, block_m=128,
+                                                  block_n=128, block_k=128),
+                       aq, bq, a_s, b_s),
+                 "256^3 CPU interpret (relative signal)"))
+    rows.append(("micro/scaled_gemm_ref_us",
+                 _time(jax.jit(ref.scaled_gemm), aq, bq, a_s, b_s),
+                 "jnp oracle, jitted"))
+
+    q = jnp.asarray(rng.standard_normal((1, 4, 256, 64)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    rows.append(("micro/flash_attention_interp_us",
+                 _time(lambda *x: ops.attention(*x, block_q=128,
+                                                block_k=128), q, kk, v),
+                 "B1 H4 S256 D64"))
+
+    # v5e analytic: genome ablation at a representative challenge shape
+    shape = (6144, 7168, 2048)
+    for name, g in (
+        ("blocked_128", KernelGenome(block_m=128, block_n=128, block_k=128)),
+        ("blocked_512", KernelGenome(block_m=512, block_n=512, block_k=512)),
+        ("best_2048x256x512", KernelGenome(block_m=2048, block_n=256,
+                                           block_k=512)),
+        ("f32_path", KernelGenome(block_m=512, block_n=512, block_k=512,
+                                  compute_dtype="float32")),
+        ("dequant_inputs", KernelGenome(block_m=512, block_n=512,
+                                        block_k=512,
+                                        scale_application="dequant_inputs")),
+        ("split_k4", KernelGenome(block_m=512, block_n=512, block_k=512,
+                                  k_split=4)),
+    ):
+        rows.append((f"micro/v5e_est_{name}_us", estimate_us(g, *shape),
+                     f"m{shape[0]} n{shape[1]} k{shape[2]}"))
+    return rows

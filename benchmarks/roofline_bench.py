@@ -1,0 +1,29 @@
+"""Roofline table assembly from the dry-run artifacts (results/dryrun)."""
+from __future__ import annotations
+
+import pathlib
+
+from repro.roofline import report
+
+RESULT_DIR = pathlib.Path("results/dryrun")
+
+
+def run():
+    rows = []
+    if not RESULT_DIR.exists():
+        return [("roofline/missing", 0.0,
+                 "run: python -m repro.launch.dryrun --all --mesh both "
+                 "--out results/dryrun")]
+    cells = report.assemble(RESULT_DIR, mesh="single")
+    for r in sorted(cells, key=lambda r: (r["arch"], r["shape"])):
+        key = f"roofline/{r['arch']}/{r['shape']}"
+        rows.append((f"{key}/bound_s", r["step_lower_bound_s"],
+                     f"dominant={r['dominant']} "
+                     f"useful={r['useful_flops_ratio']:.2f} "
+                     f"hbm={r['hbm_gib_per_device']:.1f}GiB"))
+    multi_ok = sum(1 for rec in report.load_records(RESULT_DIR)
+                   if rec["mesh"] == "multi" and rec["status"] == "ok")
+    single_ok = len(cells)
+    rows.append(("roofline/cells_single_ok", float(single_ok), "of 31"))
+    rows.append(("roofline/cells_multi_ok", float(multi_ok), "of 31"))
+    return rows

@@ -1,0 +1,27 @@
+"""Discovery-process curve (paper §4.4): best-so-far geomean per generation,
+plus stage-mix statistics (how many experiments compiled / were incorrect /
+improved) — the observable the paper argues shows 'self-consistent directed
+action'."""
+from __future__ import annotations
+
+from repro.core import EvaluationService, KernelScientist, ScriptedLLM
+
+
+def run(generations: int = 14, seed: int = 1):
+    sci = KernelScientist(llm=ScriptedLLM(seed=seed),
+                          service=EvaluationService(seed=seed))
+    sci.run(generations=generations)
+    rows = []
+    for gen, best_us in sci.trajectory():
+        rows.append((f"trajectory/gen{gen:02d}_best_us", best_us, ""))
+    statuses = {}
+    for rec in sci.population:
+        statuses[rec.status] = statuses.get(rec.status, 0) + 1
+    for status, n in sorted(statuses.items()):
+        rows.append((f"trajectory/submissions_{status}", float(n), ""))
+    improved = sum(
+        1 for i in range(1, len(sci.logbook))
+        if sci.logbook[i].best_geomean_us < sci.logbook[i - 1].best_geomean_us)
+    rows.append(("trajectory/generations_with_improvement", float(improved),
+                 f"of {len(sci.logbook)}"))
+    return rows, sci

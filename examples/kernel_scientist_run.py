@@ -1,0 +1,32 @@
+"""Full Kernel Scientist run with persisted artifacts: population JSON,
+generation logbook, and every generated kernel source.
+
+    PYTHONPATH=src python examples/kernel_scientist_run.py --generations 20
+"""
+import argparse
+import pathlib
+
+from repro.core import EvaluationService, KernelScientist, ScriptedLLM
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--generations", type=int, default=20)
+ap.add_argument("--workdir", default="results/scientist_run")
+ap.add_argument("--noise", type=float, default=0.0,
+                help="benchmark jitter sigma (platform realism)")
+ap.add_argument("--seed", type=int, default=0)
+args = ap.parse_args()
+
+sci = KernelScientist(
+    llm=ScriptedLLM(seed=args.seed),
+    service=EvaluationService(noise=args.noise, seed=args.seed),
+    workdir=args.workdir)
+best = sci.run(generations=args.generations)
+
+wd = pathlib.Path(args.workdir)
+(wd / "kernels").mkdir(exist_ok=True)
+for rec in sci.population:
+    (wd / "kernels" / f"{rec.rid}.py").write_text(rec.source)
+print(f"best: {best.rid} {best.score:.1f} us | {best.genome.describe()}")
+print(f"artifacts in {wd}/: population.json, logbook.json, kernels/*.py")
+print(f"{sci.service.submissions} sequential submissions "
+      f"({len(sci.population)} kernels)")

@@ -1,0 +1,27 @@
+"""Quickstart: run the GPU Kernel Scientist for a few generations on the
+TPU-v5e analytic evaluation platform and print the paper-Table-1 view.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import EvaluationService, KernelScientist, ScriptedLLM
+
+sci = KernelScientist(llm=ScriptedLLM(), service=EvaluationService())
+best = sci.run(generations=8)
+
+print("== population (paper Table 1 view) ==")
+lib = sci.population.get("00001")
+naive = sci.population.get("00002")
+print(f"library reference : {lib.score:9.1f} us (paper: ~850 us on MI300)")
+print(f"naive translation : {naive.score:9.1f} us "
+      f"({naive.score / lib.score:.1f}x library; paper: ~5.9x)")
+print(f"scientist best    : {best.score:9.1f} us "
+      f"({best.score / lib.score:.2f}x library; paper: ~0.53x)")
+print(f"best kernel       : {best.genome.describe()}")
+print()
+print("== discovery curve ==")
+for gen, us in sci.trajectory():
+    bar = "#" * int(60 * lib.score / us * 0.5)
+    print(f"gen {gen:2d}  {us:8.1f} us  {bar}")
+print()
+print("== last selection rationale (paper A.1 schema) ==")
+print(sci.logbook[-1].selection["rationale"])

@@ -1,0 +1,17 @@
+"""End-to-end training driver: a ~25M-parameter qwen2.5-family model for a
+few hundred steps on the synthetic copy-structured corpus (loss drops well
+below the unigram entropy), with checkpoints + resume.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import sys
+
+from repro.launch.train import main
+
+sys.exit(main([
+    "--arch", "qwen2.5-3b", "--reduced",
+    "--d-model", "256", "--n-layers", "4",
+    "--steps", "300", "--batch", "8", "--seq", "128",
+    "--peak-lr", "3e-3",
+    "--ckpt-dir", "results/train_lm_ckpt", "--ckpt-every", "100",
+]))

@@ -1,0 +1,147 @@
+"""Topology-agnostic, atomic, async checkpointing.
+
+Checkpoints store *logical* arrays (host numpy) keyed by tree path, plus a
+manifest — nothing about the mesh is persisted, so a checkpoint written on
+a (16,16) mesh restores onto (2,16,16), a debug (2,2), or a single device:
+``restore`` re-shards every leaf to the shardings the caller provides
+(elastic re-scale).  Writes go to a temp dir + atomic rename with a COMMIT
+marker, so a preempted writer can never corrupt the latest checkpoint;
+``latest_step`` only considers committed checkpoints.  ``save_async``
+snapshots to host and writes on a background thread (training continues).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+_COMMIT = "COMMIT"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = leaf
+    return flat
+
+
+class Checkpointer:
+    def __init__(self, directory, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ io
+    def _step_dir(self, step: int) -> pathlib.Path:
+        return self.dir / f"step_{step:010d}"
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        """Synchronous atomic save."""
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._write(step, host, extra or {})
+
+    def save_async(self, step: int, tree: Any,
+                   extra: Optional[dict] = None):
+        """Snapshot to host now; write on a background thread."""
+        self.wait()
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, extra or {}), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree, extra: dict):
+        final = self._step_dir(step)
+        tmp = final.with_name(final.name + ".tmp")
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = _flatten(host_tree)
+        np.savez(tmp / "arrays.npz", **flat)
+        treedef = jax.tree_util.tree_structure(host_tree)
+        (tmp / _MANIFEST).write_text(json.dumps({
+            "step": step,
+            "keys": sorted(flat),
+            "treedef": str(treedef),
+            "extra": extra,
+        }))
+        (tmp / _COMMIT).write_text("ok")
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)            # atomic on POSIX
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # --------------------------------------------------------------- query
+    def all_steps(self) -> list:
+        out = []
+        for p in sorted(self.dir.glob("step_*")):
+            if p.suffix == ".tmp" or not (p / _COMMIT).exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------- restore
+    def restore(self, step: int, target_tree: Any, shardings: Any = None):
+        """Restore into the structure of ``target_tree`` (abstract or
+        concrete), placing each leaf with ``shardings`` (tree of Sharding or
+        None => default device placement).  The mesh may differ arbitrarily
+        from the one that wrote the checkpoint."""
+        d = self._step_dir(step)
+        assert (d / _COMMIT).exists(), f"no committed checkpoint at {d}"
+        arrays = np.load(d / "arrays.npz")
+        flat_target = _flatten(target_tree)
+        missing = set(flat_target) - set(arrays.files)
+        assert not missing, f"checkpoint missing keys: {sorted(missing)[:5]}"
+
+        flat_shard = (_flatten(shardings) if shardings is not None
+                      else {k: None for k in flat_target})
+        leaves_by_key = {}
+        for key, tgt in flat_target.items():
+            arr = arrays[key]
+            assert tuple(arr.shape) == tuple(tgt.shape), (
+                key, arr.shape, tgt.shape)
+            tdt = np.dtype(tgt.dtype)
+            if arr.dtype != tdt:
+                # ml_dtypes (bfloat16, fp8) survive npz as void records of
+                # the right width — reinterpret, never cast
+                assert arr.dtype.itemsize == tdt.itemsize, (key, arr.dtype,
+                                                            tdt)
+                arr = arr.view(tdt)
+            sh = flat_shard.get(key)
+            leaves_by_key[key] = (jax.device_put(arr, sh) if sh is not None
+                                  else jax.device_put(arr))
+
+        # rebuild in target tree order
+        paths, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+        ordered = []
+        for path, _ in paths:
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in path)
+            ordered.append(leaves_by_key[key])
+        return jax.tree_util.tree_unflatten(treedef, ordered)
+
+    def extra(self, step: int) -> dict:
+        d = self._step_dir(step)
+        return json.loads((d / _MANIFEST).read_text())["extra"]

@@ -1,0 +1,59 @@
+"""Architecture registry: ``--arch <id>`` resolution + per-cell skip rules.
+
+Every assigned architecture is a module with ``config()`` (the exact
+published dims) and ``reduced()`` (a small same-family config for CPU smoke
+tests).  ``applicable(arch, shape)`` encodes the assignment's skip rules:
+encoder-only archs have no decode step, and ``long_500k`` runs only for
+sub-quadratic (SSM / hybrid-local-attention) families.
+"""
+from __future__ import annotations
+
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+
+from . import (
+    command_r_plus_104b, deepseek_v2_236b, hubert_xlarge, mamba2_2_7b,
+    qwen1_5_110b, qwen2_5_3b, qwen2_vl_72b, qwen3_moe_235b,
+    recurrentgemma_9b, stablelm_12b,
+)
+
+_MODULES = (
+    hubert_xlarge, qwen1_5_110b, stablelm_12b, command_r_plus_104b,
+    qwen2_5_3b, recurrentgemma_9b, deepseek_v2_236b, qwen3_moe_235b,
+    qwen2_vl_72b, mamba2_2_7b,
+)
+
+ARCHS = {m.ARCH_ID: m for m in _MODULES}
+ARCH_IDS = tuple(ARCHS)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    return ARCHS[arch_id].config()
+
+
+def get_reduced(arch_id: str) -> ArchConfig:
+    return ARCHS[arch_id].reduced()
+
+
+# Families with sub-quadratic sequence mixing (run long_500k).
+_SUBQUADRATIC = ("rglru", "ssm")
+
+
+def applicable(cfg: ArchConfig, shape: ShapeConfig) -> tuple:
+    """(runnable, reason_if_skipped) — DESIGN.md §Arch-applicability."""
+    if cfg.encoder_only and shape.kind == "decode":
+        return False, "encoder-only: no decode step"
+    if shape.name == "long_500k" and cfg.family not in _SUBQUADRATIC:
+        return False, ("pure full-attention arch: 512k quadratic decode is "
+                       "not a supported config (see DESIGN.md)")
+    return True, ""
+
+
+def all_cells():
+    """Every (arch_id, shape_name) with its applicability verdict."""
+    out = []
+    for aid in ARCH_IDS:
+        cfg = get_config(aid)
+        for sname, shape in SHAPES.items():
+            ok, why = applicable(cfg, shape)
+            out.append((aid, sname, ok, why))
+    return out

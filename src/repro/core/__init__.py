@@ -1,0 +1,14 @@
+"""The paper's primary contribution: the GPU Kernel Scientist —
+an LLM-driven evolutionary loop (Selector -> Designer -> 3x Writer ->
+sequential black-box Evaluation) optimizing one complex accelerator kernel,
+adapted MI300/HIP -> TPU v5e/Pallas (see DESIGN.md §2).
+"""
+from .evaluator import EvaluationService, estimate_us  # noqa: F401
+from .genome import (  # noqa: F401
+    SEED_LIBRARY, SEED_MONOLITH, SEED_MXU, SEED_NAIVE, KernelGenome,
+)
+from .llm import HTTPChatLLM, LLMClient, ScriptedLLM  # noqa: F401
+from .population import (  # noqa: F401
+    BENCH_CONFIGS_6, BENCH_CONFIGS_18, KernelRecord, Population,
+)
+from .scientist import KernelScientist  # noqa: F401

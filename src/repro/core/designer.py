@@ -1,0 +1,81 @@
+"""Stage 2 — LLM Experiment Designer (paper §3.2).
+
+Given the Base code plus assimilated knowledge (the findings document), the
+LLM produces 10 optimization *avenues*, then 5 *experiment plans* each with a
+description, a rubric, a predicted performance-benefit range ``[lo, hi]`` and
+an ``innovation`` score.  Three plans are then chosen **without replacement**
+by the paper's fixed rule: (i) most innovative, (ii) highest maximum
+performance, (iii) highest minimum performance.
+"""
+from __future__ import annotations
+
+import json
+
+from . import knowledge, prompts
+from .genome import KernelGenome
+from .llm import LLMClient
+from .population import Population
+
+
+def _candidate_edits(base_genome: KernelGenome | None) -> list:
+    """Machine-readable edit suggestions shipped with the findings document
+    (the digested-manual part of the knowledge base).  The LLM may use,
+    modify, or ignore them."""
+    g = base_genome or KernelGenome(style="library")
+    cands = []
+    for avenue in knowledge.AVENUES:
+        for rubric, new_g in avenue.edits(g):
+            base_d = json.loads(g.to_json())
+            new_d = json.loads(new_g.to_json())
+            edit = {k: v for k, v in new_d.items() if base_d.get(k) != v}
+            cands.append({
+                "avenue": avenue.name,
+                "mi300_origin": avenue.mi300_origin,
+                "rubric": rubric,
+                "genome_edit": edit,
+                "innovation_prior": avenue.innovation_prior,
+            })
+    return cands
+
+
+def design(population: Population, basis_id: str, reference_id: str,
+           llm: LLMClient, task_text: str = prompts.TASK_TEXT) -> list:
+    """Returns the 5 experiment plans (dicts), unpicked."""
+    base = population.get(basis_id)
+    base_analysis = population.one_step_analysis(basis_id)
+    base_analysis["genome"] = base.genome.to_json() if base.genome else None
+    reference_analysis = population.one_step_analysis(reference_id)
+
+    avenue_texts = ([a.description for a in knowledge.AVENUES]
+                    + list(knowledge.EXTRA_AVENUE_TEXTS))
+    prompt = prompts.designer_prompt(
+        base_analysis, reference_analysis, base.source,
+        knowledge.FINDINGS_DOCUMENT, avenue_texts,
+        _candidate_edits(base.genome), task_text)
+    reply = prompts.extract_reply_json(llm.complete(prompt))
+
+    plans = list(reply["experiments"])
+    if len(plans) < 1:
+        raise ValueError("designer produced no experiment plans")
+    for p in plans:
+        lo, hi = p["performance"]
+        assert lo <= hi, p
+        assert 0 <= int(p["innovation"]) <= 100, p
+    return plans[:5]
+
+
+def pick3(plans: list) -> list:
+    """The paper's fixed choose-3-of-5 rule, without replacement:
+    (i) most innovative; (ii) highest max performance; (iii) highest min
+    performance."""
+    remaining = list(plans)
+    chosen = []
+    for keyfn in (lambda p: p["innovation"],
+                  lambda p: p["performance"][1],
+                  lambda p: p["performance"][0]):
+        if not remaining:
+            break
+        best = max(remaining, key=keyfn)
+        chosen.append(best)
+        remaining.remove(best)
+    return chosen

@@ -1,0 +1,241 @@
+"""EvaluationService — the black-box testing/benchmark platform (paper §3.4).
+
+Reproduces the competition interface constraints exactly:
+  * submissions are **source text**, compiled server-side; compile/lowering
+    failures come back as feedback strings;
+  * numerical correctness is verified against a reference oracle before any
+    timing is reported;
+  * the only performance signal is end-to-end time per benchmark MxKxN
+    configuration — no profiler;
+  * submissions are processed **sequentially** ("good citizen", §3.4) — the
+    service hard-fails on concurrent use.
+
+Two timing backends:
+  * ``cost_model`` — analytic TPU-v5e timing from the submission's GENOME
+    metadata (this container has no TPU; the model is the platform).  Its
+    terms are the §Roofline terms: max(MXU, HBM, VPU) + pipeline overheads.
+  * ``wall_clock`` — really executes the submitted kernel (interpret mode on
+    CPU) and times it; used by tests and examples with small configurations,
+    where it is a true black box.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from . import codegen
+from .genome import (
+    HBM_BW, MXU_BF16_FLOPS, MXU_F32_FLOPS, SCALE_BLOCK, VMEM_USABLE,
+    VPU_F32_FLOPS, KernelGenome,
+)
+from .population import BENCH_CONFIGS_18, config_key
+
+LAUNCH_OVERHEAD_US = 15.0
+
+
+class PlatformCompileError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Analytic TPU-v5e timing model (the platform's ground truth in this repo)
+# ---------------------------------------------------------------------------
+def _ceil(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def estimate_us(genome: KernelGenome, m: int, n: int, k: int) -> float:
+    """Estimated execution time in microseconds on one TPU v5e chip."""
+    if genome.style == "library":
+        # separate f32 dequant pass (read fp8 + write bf16, both operands),
+        # then a well-blocked XLA matmul at ~75% MXU utilisation
+        deq = 3 * (m * k + k * n) / HBM_BW
+        mm_bytes = 2 * (m * k + k * n) + 2 * m * n
+        mm = max(2 * m * n * k / (MXU_BF16_FLOPS * 0.75), mm_bytes / HBM_BW)
+        return (deq + mm) * 1e6 + LAUNCH_OVERHEAD_US
+
+    if genome.style == "naive":
+        vmem = (m * k + k * n) + 4 * m * n + 2 * m * n
+        if vmem > VMEM_USABLE:
+            raise PlatformCompileError(
+                f"RESOURCE_EXHAUSTED: single-program kernel requires "
+                f"{vmem/2**20:.0f} MiB VMEM ({VMEM_USABLE/2**20:.0f} MiB "
+                f"available): program allocation failed")
+        t = max(2 * m * n * k / MXU_F32_FLOPS,
+                (m * k + k * n + 2 * m * n) / HBM_BW)
+        return t * 1e6 + LAUNCH_OVERHEAD_US
+
+    # ---- blocked kernel: mirror run()'s clamping/padding exactly ----------
+    bm = min(genome.block_m, _ceil(m, 128))
+    bn = min(genome.block_n, _ceil(n, 128))
+    bk = min(genome.block_k, _ceil(k, 128))
+    mp, np_, kp = _ceil(m, bm), _ceil(n, bn), _ceil(k, bk)
+    gm, gn, gk_total = mp // bm, np_ // bn, kp // bk
+    ks = min(genome.k_split, gk_total)
+    while gk_total % ks:
+        ks -= 1
+
+    # HBM traffic: A re-streamed once per N-block, B once per M-block
+    # (index-map invariance gives no further reuse with K innermost).
+    a_bytes = mp * kp * gn
+    b_bytes = kp * np_ * gm
+    scale_bytes = (mp * (kp // SCALE_BLOCK) * 4 * gn
+                   + (kp // SCALE_BLOCK) * (np_ // SCALE_BLOCK) * 4 * gm)
+    if ks > 1:  # f32 partials: write ks copies, read back, write bf16 final
+        out_bytes = 4 * mp * np_ * ks * 2 + 2 * mp * np_
+    else:
+        out_bytes = 2 * mp * np_
+    hbm = (a_bytes + b_bytes + scale_bytes + out_bytes) / HBM_BW
+
+    rate = (MXU_BF16_FLOPS if genome.compute_dtype == "bfloat16"
+            else MXU_F32_FLOPS)
+    # accumulator revisit cost shrinks as the K tile grows
+    util = 1.0 - 0.15 * (SCALE_BLOCK / bk)
+    compute = 2 * mp * np_ * kp / (rate * util)
+
+    n_sub_total = kp // SCALE_BLOCK
+    if genome.scale_application == "scale_acc":
+        vpu_flops = 3.0 * mp * np_ * n_sub_total
+    else:  # dequantize both tiles on every use
+        vpu_flops = 2.0 * (mp * kp * gn + kp * np_ * gm)
+    if ks > 1:
+        vpu_flops += ks * mp * np_  # final partial-sum reduction
+    vpu = vpu_flops / VPU_F32_FLOPS
+
+    # pipeline prologue/epilogue: first input fetch + last output drain
+    overhead = 2 * (bm * bk + bk * bn) / HBM_BW
+    return max(compute, hbm, vpu) * 1e6 + overhead * 1e6 + LAUNCH_OVERHEAD_US
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class EvalResult:
+    status: str                 # ok | compile_error | incorrect
+    error: str = ""
+    timings_us: dict = dataclasses.field(default_factory=dict)
+
+
+class EvaluationService:
+    def __init__(self, backend: str = "cost_model",
+                 bench_configs=BENCH_CONFIGS_18,
+                 correctness_config=(256, 256, 256),
+                 noise: float = 0.0, seed: int = 0,
+                 rtol: float = 0.06) -> None:
+        assert backend in ("cost_model", "wall_clock")
+        self.backend = backend
+        self.bench_configs = tuple(bench_configs)
+        self.correctness_config = correctness_config
+        self.noise = noise
+        self.seed = seed
+        self.rtol = rtol
+        self.submissions = 0
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------ api
+    def submit(self, source: str) -> EvalResult:
+        """Sequential black-box evaluation of one kernel source."""
+        if not self._lock.acquire(blocking=False):
+            raise RuntimeError(
+                "EvaluationService is sequential-only (paper §3.4): a "
+                "submission is already in flight")
+        try:
+            self.submissions += 1
+            return self._evaluate(source)
+        finally:
+            self._lock.release()
+
+    # ------------------------------------------------------------ internals
+    def _evaluate(self, source: str) -> EvalResult:
+        try:
+            run, genome_json = codegen.load_kernel(source)
+        except Exception as e:  # platform 'compile' feedback
+            return EvalResult("compile_error", f"{type(e).__name__}: {e}")
+
+        ok, err = self._check_correctness(run)
+        if err is not None:
+            return EvalResult("compile_error", err)
+        if not ok:
+            return EvalResult("incorrect",
+                              "output mismatch vs reference oracle "
+                              f"(rtol {self.rtol}) on "
+                              f"{self.correctness_config}")
+
+        if self.backend == "cost_model":
+            if not genome_json:
+                return EvalResult(
+                    "compile_error",
+                    "platform rejected submission: missing GENOME metadata "
+                    "(required for scheduling on the timing fleet)")
+            try:
+                genome = KernelGenome.from_json(genome_json)
+                timings = {}
+                for cfg in self.bench_configs:
+                    t = estimate_us(genome, *cfg)
+                    timings[config_key(cfg)] = self._jitter(t, cfg)
+            except PlatformCompileError as e:
+                return EvalResult("compile_error", str(e))
+            return EvalResult("ok", timings_us=timings)
+
+        timings = {}
+        for cfg in self.bench_configs:
+            try:
+                timings[config_key(cfg)] = self._time_wall(run, cfg)
+            except Exception as e:
+                return EvalResult("compile_error",
+                                  f"{type(e).__name__} on {cfg}: {e}")
+        return EvalResult("ok", timings_us=timings)
+
+    def _problem(self, cfg, seed=0):
+        from repro.kernels import ref
+        import jax.numpy as jnp
+        m, n, k = cfg
+        rng = np.random.default_rng(seed)
+        a32 = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        b32 = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        aq, a_s = ref.quantize_blockwise(a32, jnp.float8_e4m3fn)
+        bq, b_s = ref.quantize_blockwise_2d(b32, jnp.float8_e4m3fn)
+        return aq, bq, a_s, b_s
+
+    def _check_correctness(self, run) -> tuple:
+        """Returns (is_correct, compile_error_or_None)."""
+        from repro.kernels import ref
+        import jax.numpy as jnp
+        m, n, k = self.correctness_config
+        aq, bq, a_s, b_s = self._problem((m, n, k), seed=1234)
+        want = ref.scaled_gemm(aq, bq, a_s, b_s).astype(jnp.float32)
+        try:
+            got = np.asarray(run(aq, bq, a_s, b_s), dtype=np.float32)
+        except Exception as e:
+            return False, f"{type(e).__name__} during execution: {e}"
+        if got.shape != want.shape:
+            return False, None
+        scale = float(np.max(np.abs(np.asarray(want)))) or 1.0
+        return bool(np.max(np.abs(got - np.asarray(want))) <= self.rtol * scale), None
+
+    def _time_wall(self, run, cfg) -> float:
+        import jax
+        args = self._problem(cfg)
+        out = run(*args)
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6
+
+    def _jitter(self, t_us: float, cfg) -> float:
+        if not self.noise:
+            return t_us
+        h = hashlib.sha256(
+            f"{self.seed}:{self.submissions}:{cfg}".encode()).digest()
+        u = int.from_bytes(h[:8], "big") / 2**64
+        v = int.from_bytes(h[8:16], "big") / 2**64
+        gauss = math.sqrt(-2 * math.log(max(u, 1e-12))) * math.cos(2 * math.pi * v)
+        return t_us * math.exp(self.noise * gauss)

@@ -1,0 +1,151 @@
+"""KernelGenome — the typed search space the Kernel Scientist explores.
+
+The paper's LLM Kernel Writer edits HIP source directly.  Our writer renders
+a *genome* into real Pallas source (see ``writer.render_source``), and the
+EvaluationService compiles that **source text**, so the loop is genuinely
+code-in-the-loop: a real LLM backend can emit arbitrary kernel source through
+the same interface, and compile errors become black-box feedback exactly as
+on the competition platform.
+
+Each genome axis corresponds to an optimization avenue the paper's Experiment
+Designer explored on MI300, re-derived for the TPU memory hierarchy
+(HBM -> VMEM -> VREG, 128x128 MXU).  See ``knowledge.AVENUES`` for the
+per-avenue MI300 -> TPU mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+# --- TPU v5e hardware constants (also used by the analytic cost model) -----
+MXU_BF16_FLOPS = 197e12       # peak bf16 FLOP/s per chip
+MXU_F32_FLOPS = MXU_BF16_FLOPS / 8.0   # fp32 fallback path
+VPU_F32_FLOPS = 3.9e12        # vector unit, f32
+HBM_BW = 819e9                # bytes/s
+VMEM_BYTES = 128 * 1024 * 1024
+VMEM_USABLE = int(VMEM_BYTES * 0.75)  # compiler/scoreboard headroom
+LANE = 128                    # last-dim register tiling
+SUBLANE = 8
+
+SCALE_BLOCK = 128             # quantization block (AMD challenge spec)
+
+_DTYPE_BYTES = {"float8_e4m3fn": 1, "int8": 1, "bfloat16": 2, "float32": 4}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelGenome:
+    """One point in the scaled-GEMM kernel design space."""
+
+    style: str = "blocked"            # "library" | "naive" | "blocked"
+    block_m: int = 256
+    block_n: int = 256
+    block_k: int = 256
+    grid_order: str = "mn"            # outermost output axis: "mn" | "nm"
+    scale_application: str = "scale_acc"   # | "dequant_inputs"
+    compute_dtype: str = "bfloat16"   # MXU input dtype: "bfloat16" | "float32"
+    acc_dtype: str = "float32"
+    out_dtype: str = "bfloat16"
+    dimension_semantics: tuple = ("parallel", "parallel", "arbitrary")
+    # Beyond-paper axes added during hillclimbing:
+    k_split: int = 1                  # split-K reduction factor (1 = off)
+
+    # ----------------------------------------------------------------- utils
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["dimension_semantics"] = list(self.dimension_semantics)
+        return json.dumps(d, sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "KernelGenome":
+        d = json.loads(s)
+        d["dimension_semantics"] = tuple(d["dimension_semantics"])
+        return KernelGenome(**d)
+
+    def replace(self, **kw: Any) -> "KernelGenome":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------ validation
+    def storage_bytes(self) -> int:
+        return 1  # fp8 storage (challenge spec)
+
+    def vmem_bytes(self) -> int:
+        """Pipelined VMEM working set: 2x (double-buffered) in/out blocks +
+        accumulator scratch.  The naive style holds the whole problem, which
+        the caller checks against the actual (M, K, N)."""
+        if self.style != "blocked":
+            return 0
+        sb = self.storage_bytes()
+        n_sub = self.block_k // SCALE_BLOCK
+        in_blocks = (
+            self.block_m * self.block_k * sb          # A tile
+            + self.block_k * self.block_n * sb        # B tile
+            + self.block_m * n_sub * 4                # a_scale tile
+            + n_sub * (self.block_n // SCALE_BLOCK) * 4
+        )
+        out_block = self.block_m * self.block_n * _DTYPE_BYTES[self.out_dtype]
+        acc = self.block_m * self.block_n * _DTYPE_BYTES[self.acc_dtype]
+        return 2 * (in_blocks + out_block) + acc
+
+    def validate(self) -> list[str]:
+        """Static (pre-submission) legality check.  Returns problem list; the
+        EvaluationService independently rejects at 'compile' time, so an LLM
+        writer that skips this check still gets platform feedback."""
+        errs = []
+        if self.style not in ("library", "naive", "blocked"):
+            errs.append(f"unknown style {self.style!r}")
+        if self.style == "blocked":
+            for name, b in (("block_m", self.block_m), ("block_n", self.block_n),
+                            ("block_k", self.block_k)):
+                if b <= 0:
+                    errs.append(f"{name}={b} must be positive")
+            if self.block_k % SCALE_BLOCK:
+                errs.append(f"block_k={self.block_k} must divide by {SCALE_BLOCK}")
+            if self.block_n % SCALE_BLOCK:
+                errs.append(f"block_n={self.block_n} must divide by {SCALE_BLOCK}")
+            if self.vmem_bytes() > VMEM_USABLE:
+                errs.append(
+                    f"VMEM working set {self.vmem_bytes()/2**20:.1f} MiB exceeds "
+                    f"{VMEM_USABLE/2**20:.0f} MiB usable")
+            if self.grid_order not in ("mn", "nm"):
+                errs.append(f"grid_order={self.grid_order!r}")
+            if self.scale_application not in ("scale_acc", "dequant_inputs"):
+                errs.append(f"scale_application={self.scale_application!r}")
+            if self.compute_dtype not in ("bfloat16", "float32"):
+                errs.append(f"compute_dtype={self.compute_dtype!r}")
+            if self.k_split < 1 or self.k_split > 16:
+                errs.append(f"k_split={self.k_split} out of range [1, 16]")
+            if len(self.dimension_semantics) != 3:
+                errs.append("dimension_semantics must have 3 entries")
+            elif self.dimension_semantics[2] != "arbitrary":
+                errs.append("K grid axis carries the accumulator: must be 'arbitrary'")
+        return errs
+
+    # --------------------------------------------------------------- pretty
+    def describe(self) -> str:
+        if self.style == "library":
+            return "library path: XLA jnp.dot after full f32 dequantization"
+        if self.style == "naive":
+            return "naive: single-program kernel, whole problem resident in VMEM"
+        return (
+            f"blocked {self.block_m}x{self.block_n}x{self.block_k} "
+            f"grid={self.grid_order} k_split={self.k_split} "
+            f"scales={self.scale_application} mxu={self.compute_dtype}"
+        )
+
+
+# Paper §3 seed set, TPU-native (see DESIGN.md §4):
+#  - the provided library implementation (paper: "basic PyTorch"),
+#  - a direct translation: correct but unoptimized — f32 math, per-tile
+#    dequantization, minimal square tiles (paper: "~6x slower than PyTorch"),
+#  - the first working MXU kernel (paper: "Matrix Cores gift").
+SEED_LIBRARY = KernelGenome(style="library")
+SEED_NAIVE = KernelGenome(
+    style="blocked", block_m=128, block_n=128, block_k=128,
+    compute_dtype="float32", scale_application="dequant_inputs",
+    dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+)
+SEED_MXU = KernelGenome(style="blocked", block_m=128, block_n=128, block_k=128)
+# A single-program whole-problem kernel (VMEM-OOM on real sizes — exercised
+# by tests of the platform's compile-error feedback path).
+SEED_MONOLITH = KernelGenome(style="naive")

@@ -1,0 +1,232 @@
+"""The 'findings' knowledge base (paper §3: the LLM-digested hardware notes).
+
+The paper bootstraps from an LLM-authored findings document that summarises
+hardware quirks, external blog posts, and vendor manuals into a form the
+Experiment Designer can consume.  This module is that document for TPU v5e,
+plus the **avenue catalog**: the menu of optimization directions, each with
+the MI300 avenue it descends from (paper A.2) and its TPU-native genome
+edits.  The ScriptedLLM oracle draws its experiment ideas from here; a real
+LLM backend receives the same text in its prompt.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from .genome import (
+    HBM_BW, LANE, MXU_BF16_FLOPS, SCALE_BLOCK, SUBLANE, VMEM_USABLE,
+    KernelGenome,
+)
+
+FINDINGS_DOCUMENT = """\
+# Findings: TPU v5e for block-scaled GEMM (digested hardware notes)
+
+Target: C[bf16][M,N] = dequant(A[fp8][M,K]) @ dequant(B[fp8][K,N]),
+a_scale per (row, 128-K-block), b_scale per (128x128)-block, f32 accumulate.
+
+## Memory hierarchy
+- HBM: 16 GiB @ 819 GB/s.  VMEM: 128 MiB on-chip (the LDS analogue, but
+  *per-core* and compiler-pipelined rather than manually ping-ponged).
+- Pallas pipelines HBM->VMEM block fetches automatically from BlockSpec
+  index maps; a block whose index map output is unchanged between
+  consecutive grid steps is NOT refetched.  Double-buffering means the
+  *resident* working set is ~2x the declared blocks.
+- VREG tiling is (8, 128): last dim must be a multiple of 128 and the
+  second-minor a multiple of 8 or the layout pass inserts copies
+  (the LDS-bank-conflict analogue: misalignment costs silent shuffles).
+
+## Compute
+- MXU is a 128x128x128 systolic array: matmul tile dims should be multiples
+  of 128; bf16 in / f32 preferred_element_type accumulates at full rate
+  (197 TFLOP/s).  An f32xf32 dot runs ~8x slower (no native f32 systolic
+  pass).  fp8 has no MXU path on v5e: upcast to bf16 (exact for e4m3
+  values) and keep scales separate - this is the Matrix-Core-fragment
+  analogue of MI300's MFMA 32x32x16 fp8.
+- VPU (vector) f32 is ~3.9 TFLOP/s: per-element dequantization on the VPU
+  can dominate if applied to both operands every K-step
+  ('dequant_inputs'); applying scales to the f32 accumulator once per
+  128-K sub-block ('scale_acc') costs M*N*(K/128) VPU flops instead.
+
+## Grid & pipelining
+- dimension_semantics: 'parallel' axes may be reordered/partitioned by the
+  compiler; the K axis carries the accumulator scratch and must be
+  'arbitrary' (sequential revisiting) - the analogue of wave-level
+  accumulation in registers on MI300.
+- The output tile is written once on the last K step (single-writer, the
+  'single-wave global write' analogue); revisiting order mn vs nm controls
+  which operand is re-streamed from HBM.
+- Blocked HBM traffic: A is read (N/block_n) times, B (M/block_m) times =>
+  total bytes = M*K*(N/bn) + K*N*(M/bm) + 2*M*N.  Bigger output blocks cut
+  traffic quadratically until VMEM is exhausted.
+"""
+
+
+@dataclasses.dataclass(frozen=True)
+class Avenue:
+    """One optimization direction: MI300 origin -> TPU-native genome edit."""
+
+    name: str
+    mi300_origin: str       # the paper-avenue this descends from (A.2)
+    description: str        # what the Designer writes in its avenue list
+    innovation_prior: int   # 0-100, how structurally novel the change is
+    edits: Callable[[KernelGenome], list]   # genome -> [(rubric, new_genome)]
+
+
+def _tile_edits(g: KernelGenome) -> list:
+    out = []
+    if g.style != "blocked":
+        base = KernelGenome(style="blocked", block_m=128, block_n=128, block_k=128)
+        return [("Re-structure as a blocked MXU kernel with 128^3 VMEM tiles, "
+                 "f32 accumulator scratch, K innermost ('arbitrary').", base)]
+    for attr in ("block_m", "block_n", "block_k"):
+        cur = getattr(g, attr)
+        for nxt in (cur * 2, cur // 2):
+            if nxt < 128 or nxt > 2048:
+                continue
+            cand = g.replace(**{attr: nxt})
+            if not cand.validate():
+                out.append((
+                    f"Change {attr} from {cur} to {nxt}, keeping the other tile "
+                    f"dims fixed; re-check the VMEM working set stays within "
+                    f"budget and all matmul dims remain multiples of {LANE}.",
+                    cand))
+    return out
+
+
+def _grid_order_edits(g: KernelGenome) -> list:
+    if g.style != "blocked":
+        return []
+    nxt = "nm" if g.grid_order == "mn" else "mn"
+    return [(
+        f"Swap the outermost grid axis from {g.grid_order!r} to {nxt!r} so the "
+        f"{'B' if nxt == 'mn' else 'A'} operand is re-streamed instead; "
+        "isolate the HBM-traffic effect with unchanged tile sizes.",
+        g.replace(grid_order=nxt))]
+
+
+def _scale_edits(g: KernelGenome) -> list:
+    if g.style != "blocked":
+        return []
+    nxt = ("dequant_inputs" if g.scale_application == "scale_acc" else "scale_acc")
+    return [(
+        f"Move scale application from {g.scale_application!r} to {nxt!r}: "
+        + ("dequantize A/B tiles on the VPU before each MXU dot."
+           if nxt == "dequant_inputs" else
+           "feed raw (exactly-representable) fp8 values to the MXU in bf16 and "
+           "apply a_scale (per row) and b_scale (per column-block) to the f32 "
+           "accumulator once per 128-wide K sub-block."),
+        g.replace(scale_application=nxt))]
+
+
+def _dtype_edits(g: KernelGenome) -> list:
+    if g.style != "blocked":
+        return []
+    nxt = "float32" if g.compute_dtype == "bfloat16" else "bfloat16"
+    return [(
+        f"Switch the MXU input dtype to {nxt}: "
+        + ("full-precision dots remove any bf16 rounding concern at a "
+           "throughput cost." if nxt == "float32" else
+           "fp8 e4m3 values are exactly representable in bf16, so the MXU "
+           "fast path is numerically free."),
+        g.replace(compute_dtype=nxt))]
+
+
+def _ksplit_edits(g: KernelGenome) -> list:
+    if g.style != "blocked":
+        return []
+    out = []
+    for nxt in (g.k_split * 2, max(1, g.k_split // 2)):
+        if nxt == g.k_split or nxt > 8:
+            continue
+        cand = g.replace(k_split=nxt)
+        if not cand.validate():
+            out.append((
+                f"Set split-K factor to {nxt}: partition the K reduction over "
+                f"{nxt} parallel grid slices with a separate f32 partial-sum "
+                "buffer and a final reduction pass, trading an extra M*N*4-byte "
+                "HBM round-trip for more parallel grid work on small-M shapes.",
+                cand))
+    return out
+
+
+def _semantics_edits(g: KernelGenome) -> list:
+    if g.style != "blocked":
+        return []
+    cur = g.dimension_semantics
+    if cur[0] == "parallel":
+        nxt = ("arbitrary", "parallel", "arbitrary")
+        note = ("Constrain the outermost grid axis to sequential ('arbitrary') "
+                "to force deterministic revisit order and maximise B-tile reuse "
+                "in the pipeline.")
+    else:
+        nxt = ("parallel", "parallel", "arbitrary")
+        note = ("Mark both output grid axes 'parallel' so the compiler may "
+                "partition them across cores.")
+    return [(note, g.replace(dimension_semantics=nxt))]
+
+
+AVENUES: tuple = (
+    Avenue(
+        name="mxu_tiling",
+        mi300_origin="Fine-tune Tile Sizes (TB_M, TB_N, TB_K)",
+        description="Systematically vary VMEM tile sizes; bigger output tiles "
+                    "cut HBM re-streaming quadratically until VMEM overflows.",
+        innovation_prior=25,
+        edits=_tile_edits,
+    ),
+    Avenue(
+        name="grid_order",
+        mi300_origin="Optimized LDS Layout / iteration order",
+        description="Swap which output axis is outermost, changing which "
+                    "operand is re-fetched from HBM per output tile.",
+        innovation_prior=40,
+        edits=_grid_order_edits,
+    ),
+    Avenue(
+        name="scale_application",
+        mi300_origin="Optimize Scale Application Loop / LDS scale caching",
+        description="Apply quantization scales on the accumulator per 128-K "
+                    "sub-block instead of dequantizing both operand tiles on "
+                    "the VPU (or vice versa).",
+        innovation_prior=70,
+        edits=_scale_edits,
+    ),
+    Avenue(
+        name="mxu_dtype",
+        mi300_origin="MFMA fragment dtype selection (fp8 32x32x16)",
+        description="Choose the MXU input dtype: bf16 (exact for e4m3, full "
+                    "systolic rate) vs f32 (slow path).",
+        innovation_prior=55,
+        edits=_dtype_edits,
+    ),
+    Avenue(
+        name="split_k",
+        mi300_origin="Increase Thread Block Occupancy",
+        description="Split the K reduction across parallel grid slices to "
+                    "create enough independent tiles on small-M shapes "
+                    "(occupancy analogue).",
+        innovation_prior=85,
+        edits=_ksplit_edits,
+    ),
+    Avenue(
+        name="dimension_semantics",
+        mi300_origin="Cooperative Store to Global C / wave scheduling",
+        description="Adjust which grid axes the compiler may parallelise vs "
+                    "iterate sequentially (pipelining/revisit order).",
+        innovation_prior=60,
+        edits=_semantics_edits,
+    ),
+)
+
+# Static avenue ideas that the Designer lists but whose edits are covered by
+# the catalog above (kept for prompt fidelity: the paper always lists ~10).
+EXTRA_AVENUE_TEXTS = (
+    "Pad global inputs so M/N/K are multiples of 128 before the kernel "
+    "(layout-pass copy elimination; handled by the ops.py wrapper).",
+    "Vectorized global loads: ensure last-dim block extents are multiples of "
+    "128 lanes so HBM->VMEM DMA runs at full width.",
+    "Fuse the bf16 output cast into the final K-step store instead of a "
+    "separate epilogue pass.",
+    "Cache scale vectors in VMEM across K-steps (BlockSpec already pins them; "
+    "verify no refetch via index-map invariance).",
+)

@@ -1,0 +1,143 @@
+"""The GPU Kernel Scientist closed loop (paper Fig. 1).
+
+    seed kernels -> [ Evolutionary Selector -> Experiment Designer (5 plans,
+    pick 3) -> 3x Kernel Writer -> sequential Testing & Evaluation ] * G
+
+Everything the paper's loop records is recorded here: population with
+lineage, per-config benchmark timings, experiment descriptions/rubrics,
+selection rationales, writer reports, and a generation-by-generation logbook
+(used by benchmarks/trajectory.py for the §4.4 discovery-process figure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Optional
+
+from . import codegen, designer, prompts, selector, writer
+from .evaluator import EvaluationService, EvalResult
+from .genome import SEED_LIBRARY, SEED_MXU, SEED_NAIVE, KernelGenome
+from .llm import LLMClient, ScriptedLLM
+from .population import KernelRecord, Population
+
+
+@dataclasses.dataclass
+class GenerationLog:
+    generation: int
+    selection: dict
+    plans: list
+    picked: list
+    submitted: list            # [(rid, status, geomean_us)]
+    best_rid: str
+    best_geomean_us: float
+
+
+class KernelScientist:
+    def __init__(self, llm: Optional[LLMClient] = None,
+                 service: Optional[EvaluationService] = None,
+                 task_text: str = prompts.TASK_TEXT,
+                 workdir: Optional[str] = None) -> None:
+        self.llm = llm or ScriptedLLM()
+        self.service = service or EvaluationService()
+        self.task_text = task_text
+        self.population = Population()
+        self.logbook: list[GenerationLog] = []
+        self.workdir = pathlib.Path(workdir) if workdir else None
+        if self.workdir:
+            self.workdir.mkdir(parents=True, exist_ok=True)
+
+    # ------------------------------------------------------------ seeding
+    def seed(self, genomes=(SEED_LIBRARY, SEED_NAIVE, SEED_MXU),
+             descriptions=("library implementation (provided baseline)",
+                           "direct translation into a Pallas kernel "
+                           "(unoptimized: f32 math, per-tile dequant)",
+                           "first working MXU kernel (128^3 VMEM tiles)"),
+             ) -> None:
+        """Paper §3: the process starts from a few seed kernels."""
+        assert len(self.population) == 0, "already seeded"
+        for genome, desc in zip(genomes, descriptions):
+            source = codegen.render_source(genome, desc)
+            rec = KernelRecord(
+                rid=self.population.new_id(), parents=(), source=source,
+                genome=genome,
+                experiment={"description": desc, "rubric": "(seed)",
+                            "performance": [0, 0], "innovation": 0},
+                writer_report="(seed kernel)", generation=0)
+            self.population._records[rec.rid] = rec
+            self._apply_eval(rec, self.service.submit(source))
+        self._persist()
+
+    # --------------------------------------------------------------- loop
+    def run_generation(self, generation: int) -> GenerationLog:
+        sel = selector.select(self.population, self.llm, self.task_text)
+        plans = designer.design(self.population, sel.basis_code,
+                                sel.basis_reference, self.llm, self.task_text)
+        picked = designer.pick3(plans)
+
+        submitted = []
+        for exp in picked:  # three independent writer instances (paper §3.2)
+            wk = writer.write(self.population, sel.basis_code,
+                              sel.basis_reference, exp, self.llm,
+                              self.task_text)
+            rec = KernelRecord(
+                rid=self.population.new_id(),
+                parents=(sel.basis_code, sel.basis_reference),
+                source=wk.source,
+                genome=(KernelGenome.from_json(wk.genome_json)
+                        if wk.genome_json else None),
+                experiment={k: exp[k] for k in
+                            ("description", "rubric", "performance",
+                             "innovation")},
+                writer_report=wk.report, generation=generation)
+            self.population.add(rec)
+            # sequential submission — the platform enforces it too
+            self._apply_eval(rec, self.service.submit(wk.source))
+            submitted.append((rec.rid, rec.status,
+                              rec.score if rec.score != float("inf") else None))
+
+        best = self.population.best()
+        log = GenerationLog(
+            generation=generation,
+            selection=dataclasses.asdict(sel),
+            plans=[{k: p[k] for k in ("description", "performance",
+                                      "innovation")} for p in plans],
+            picked=[p["description"] for p in picked],
+            submitted=submitted,
+            best_rid=best.rid, best_geomean_us=best.score)
+        self.logbook.append(log)
+        self._persist()
+        return log
+
+    def run(self, generations: int) -> KernelRecord:
+        if len(self.population) == 0:
+            self.seed()
+        start = len(self.logbook) + 1
+        for g in range(start, start + generations):
+            self.run_generation(g)
+        return self.population.best()
+
+    # ------------------------------------------------------------ helpers
+    def _apply_eval(self, rec: KernelRecord, res: EvalResult) -> None:
+        rec.status = res.status
+        rec.error = res.error
+        rec.timings_us = dict(res.timings_us)
+
+    def _persist(self) -> None:
+        if not self.workdir:
+            return
+        self.population.save(self.workdir / "population.json")
+        (self.workdir / "logbook.json").write_text(json.dumps(
+            [dataclasses.asdict(l) for l in self.logbook], indent=1))
+
+    # ------------------------------------------------------------- report
+    def trajectory(self) -> list:
+        """(generation, best_geomean_us) pairs — the discovery curve."""
+        out = []
+        best = min((r.score for r in self.population if r.generation == 0),
+                   default=float("inf"))
+        out.append((0, best))
+        for log in self.logbook:
+            best = min(best, log.best_geomean_us)
+            out.append((log.generation, best))
+        return out

@@ -1,0 +1,42 @@
+"""Stage 1 — LLM Evolutionary Selector (paper §3.1).
+
+From the population (IDs, parent lineage, per-config benchmark timings) the
+LLM picks a *Base* for the next experiment and a *Reference* "chosen for its
+ability to help in analysing experiments".  There is deliberately no
+hand-built selection mechanism beyond this (the paper relies on the LLM's
+multi-objective judgement); the stage only validates the reply.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import prompts
+from .llm import LLMClient
+from .population import Population
+
+
+@dataclasses.dataclass(frozen=True)
+class Selection:
+    basis_code: str
+    basis_reference: str
+    rationale: str
+
+
+def select(population: Population, llm: LLMClient,
+           task_text: str = prompts.TASK_TEXT) -> Selection:
+    rows = population.summary_table()
+    prompt = prompts.selector_prompt(rows, task_text)
+    reply = prompts.extract_reply_json(llm.complete(prompt))
+
+    basis = str(reply["basis_code"])
+    reference = str(reply["basis_reference"])
+    known = {r["id"] for r in rows}
+    if basis not in known:
+        raise ValueError(f"selector returned unknown basis {basis!r}")
+    if population.get(basis).status != "ok":
+        raise ValueError(f"selector basis {basis!r} has no benchmarks")
+    if reference not in known:
+        # tolerate a hallucinated reference: fall back to the basis' parent
+        parents = population.get(basis).parents
+        reference = parents[0] if parents else basis
+    return Selection(basis, reference, str(reply.get("rationale", "")))

@@ -1,0 +1,54 @@
+"""Stage 3 — LLM Kernel Writer (paper §3.3).
+
+"This stage lies at the heart of the GPU Kernel Scientist process": it turns
+an experiment rubric plus the Base code (with the Reference in context, and
+one-step experiment analyses for both) into a complete new kernel module,
+and reports which techniques it actually used — which may deviate from the
+rubric.  Three writer instances are launched per generation (paper §3.2);
+the EvaluationService still serialises their submissions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import prompts
+from .llm import LLMClient
+from .population import Population
+
+
+@dataclasses.dataclass(frozen=True)
+class WrittenKernel:
+    source: str
+    genome_json: str | None
+    report: str
+
+
+def write(population: Population, basis_id: str, reference_id: str,
+          experiment: dict, llm: LLMClient,
+          task_text: str = prompts.TASK_TEXT) -> WrittenKernel:
+    base = population.get(basis_id)
+    ref = population.get(reference_id)
+
+    base_record = population.one_step_analysis(basis_id)
+    base_record["source"] = base.source
+    base_record["genome"] = base.genome.to_json() if base.genome else None
+    ref_record = population.one_step_analysis(reference_id)
+    ref_record["source"] = ref.source
+
+    from . import knowledge
+    prompt = prompts.writer_prompt(experiment, base_record, ref_record,
+                                   knowledge.FINDINGS_DOCUMENT, task_text)
+    reply = prompts.extract_reply_json(llm.complete(prompt))
+
+    source = reply["source"]
+    genome = reply.get("genome")
+    genome_json = None
+    if genome is not None:
+        import json
+
+        from .genome import KernelGenome
+        if isinstance(genome, str):
+            genome = json.loads(genome)
+        genome["dimension_semantics"] = tuple(genome["dimension_semantics"])
+        genome_json = KernelGenome(**genome).to_json()
+    return WrittenKernel(source, genome_json, str(reply.get("report", "")))

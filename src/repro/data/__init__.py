@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticLM, device_put_batch  # noqa: F401

@@ -1,0 +1,78 @@
+"""Deterministic synthetic token pipeline, sharded and straggler-free.
+
+Design for scale: batches are a pure function of (seed, step, shard), so
+any host can (re)produce its shard without coordination — restarts, elastic
+re-scales and straggler exclusion never need a data-service checkpoint, and
+there is no dynamic work queue to skew step times.  A real corpus pipeline
+drops in behind the same ``__iter__``/``at_step`` interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    inputs: str = "tokens"           # "tokens" | "embeddings"
+    d_model: int = 0                 # for embedding inputs
+    mrope: bool = False
+
+
+class SyntheticLM:
+    """Zipf-ish synthetic LM stream with shifted-label structure (so loss
+    actually decreases during integration tests)."""
+
+    def __init__(self, cfg: DataConfig, shard_index: int = 0,
+                 shard_count: int = 1):
+        assert cfg.global_batch % shard_count == 0
+        self.cfg = cfg
+        self.shard_index = shard_index
+        self.shard_count = shard_count
+        self.local_batch = cfg.global_batch // shard_count
+
+    def at_step(self, step: int) -> dict:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence(
+                [cfg.seed, step, self.shard_index]))
+        # zipfian marginals + a copy pattern: token[t] repeats token[t-1]
+        # with p=0.5, giving the model something learnable
+        ranks = rng.zipf(1.3, size=(self.local_batch, cfg.seq_len + 1))
+        tokens = np.minimum(ranks, cfg.vocab - 1).astype(np.int32)
+        copy_mask = rng.random((self.local_batch, cfg.seq_len + 1)) < 0.5
+        for t in range(1, cfg.seq_len + 1):
+            tokens[:, t] = np.where(copy_mask[:, t], tokens[:, t - 1],
+                                    tokens[:, t])
+        batch = {"labels": tokens[:, 1:].copy()}
+        if cfg.inputs == "embeddings":
+            emb_rng = np.random.default_rng(cfg.seed + 7)
+            table = emb_rng.standard_normal(
+                (min(cfg.vocab, 4096), cfg.d_model)).astype(np.float32) * 0.02
+            batch["embeds"] = table[tokens[:, :-1] % table.shape[0]]
+        else:
+            batch["tokens"] = tokens[:, :-1].copy()
+        if cfg.mrope:
+            pos = np.broadcast_to(
+                np.arange(cfg.seq_len, dtype=np.int32),
+                (self.local_batch, cfg.seq_len))
+            batch["positions"] = np.stack([pos, pos * 0, pos * 0], 0)
+        return batch
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.at_step(step)
+            step += 1
+
+
+def device_put_batch(batch: dict, shardings) -> dict:
+    """Place a host batch onto the mesh with the given sharding tree."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), batch, shardings)

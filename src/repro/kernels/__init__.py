@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots, with pure-jnp oracles.
+
+Layout per the repo convention: ``<name>.py`` holds the ``pl.pallas_call`` +
+BlockSpec implementation, ``ops.py`` the jit'd public wrappers, ``ref.py``
+the oracles.  ``scaled_gemm`` is the paper's target kernel (the AMD
+challenge fp8 block-scaled GEMM, adapted to the TPU memory hierarchy).
+"""
+from . import ops, ref  # noqa: F401
+from .flash_attention import decode_attention, flash_attention  # noqa: F401
+from .scaled_gemm import naive_scaled_gemm, scaled_gemm  # noqa: F401
+from .ssd import ssd  # noqa: F401

@@ -1,0 +1,164 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth used by tests/allclose sweeps and by the
+EvaluationService's correctness check (the competition platform's "verified
+to give correct results" role, paper §3).  They are deliberately simple and
+written for clarity, not speed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SCALE_BLOCK = 128  # quantization block edge (matches the AMD challenge spec)
+
+
+# ---------------------------------------------------------------------------
+# Block-scaled GEMM (the paper's target kernel)
+# ---------------------------------------------------------------------------
+def scaled_gemm(a, b, a_scale, b_scale, out_dtype=jnp.bfloat16):
+    """C = dequant(A) @ dequant(B), fp32 accumulate.
+
+    a        : (M, K)       storage dtype (float8_e4m3fn / int8 / bf16)
+    b        : (K, N)       same storage dtype
+    a_scale  : (M, K/128)   f32 — per-row, per-128-K-block scales
+    b_scale  : (K/128, N/128) f32 — per-128x128-block scales
+    returns  : (M, N) out_dtype
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    kb = k // SCALE_BLOCK
+    a32 = a.astype(jnp.float32).reshape(m, kb, SCALE_BLOCK)
+    a32 = a32 * a_scale.astype(jnp.float32)[:, :, None]
+    b32 = b.astype(jnp.float32).reshape(kb, SCALE_BLOCK, n // SCALE_BLOCK, SCALE_BLOCK)
+    b32 = b32 * b_scale.astype(jnp.float32)[:, None, :, None]
+    out = jnp.einsum(
+        "mks,kstu->mtu",
+        a32,
+        b32,
+        precision=jax.lax.Precision.HIGHEST,
+    ).reshape(m, n)
+    return out.astype(out_dtype)
+
+
+def quantize_blockwise(x, dtype=jnp.float8_e4m3fn):
+    """Quantize a (M, K) f32 matrix into (values, scales) with the layout above.
+
+    For the B operand pass x of shape (K, N) transposed handling is done by
+    the caller (see tests) — this helper quantizes per (row, 128-K-block).
+    """
+    m, k = x.shape
+    kb = k // SCALE_BLOCK
+    xr = x.reshape(m, kb, SCALE_BLOCK)
+    max_abs = jnp.max(jnp.abs(xr), axis=-1)
+    fmax = jnp.array(
+        448.0 if dtype == jnp.float8_e4m3fn else (127.0 if dtype == jnp.int8 else 3e38),
+        jnp.float32,
+    )
+    scale = jnp.where(max_abs > 0, max_abs / fmax, 1.0)
+    q = (xr / scale[:, :, None]).astype(dtype)
+    return q.reshape(m, k), scale
+
+
+def quantize_blockwise_2d(x, dtype=jnp.float8_e4m3fn):
+    """Quantize (K, N) into values + (K/128, N/128) per-block scales."""
+    k, n = x.shape
+    kb, nb = k // SCALE_BLOCK, n // SCALE_BLOCK
+    xr = x.reshape(kb, SCALE_BLOCK, nb, SCALE_BLOCK)
+    max_abs = jnp.max(jnp.abs(xr), axis=(1, 3))
+    fmax = jnp.array(
+        448.0 if dtype == jnp.float8_e4m3fn else (127.0 if dtype == jnp.int8 else 3e38),
+        jnp.float32,
+    )
+    scale = jnp.where(max_abs > 0, max_abs / fmax, 1.0)
+    q = (xr / scale[:, None, :, None]).astype(dtype)
+    return q.reshape(k, n), scale
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (prefill) — plain softmax attention oracle
+# ---------------------------------------------------------------------------
+def attention(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B, Hq, S, D), k/v: (B, Hkv, S, D) with Hq % Hkv == 0 (GQA).
+
+    window: if not None, token i attends to [i-window+1, i] only (local attn).
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, s, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", qf, kf) * scale
+    pos_q = jnp.arange(s)[:, None]
+    pos_k = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= pos_k <= pos_q
+    if window is not None:
+        mask &= pos_k > pos_q - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", probs, vf)
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token vs a long KV cache)
+# ---------------------------------------------------------------------------
+def decode_attention(q, k, v, kv_len, *, scale=None):
+    """q: (B, Hq, D); k/v: (B, Hkv, S, D); kv_len: (B,) valid prefix lengths."""
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    logits = jnp.einsum("bhgd,bhtd->bhgt", qf, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, :] < kv_len[:, None]  # (B, S)
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgt,bhtd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality) — sequential-scan oracle
+# ---------------------------------------------------------------------------
+def ssd(x, dt, a, b, c, *, d_skip=None):
+    """Sequential (exact) SSM scan.
+
+    x : (B, S, H, P)   inputs per head
+    dt: (B, S, H)      softplus'd timestep (positive)
+    a : (H,)           negative decay rate per head (A = -exp(a_log))
+    b : (B, S, N)      input projection (ngroups=1, broadcast over heads)
+    c : (B, S, N)      output projection
+    d_skip: (H,) or None  skip connection
+    returns y: (B, S, H, P)
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    decay = jnp.exp(dt * a[None, None, :])  # (B, S, H)  in (0, 1)
+
+    def step(state, inp):
+        x_t, dt_t, dec_t, b_t, c_t = inp
+        # state: (B, H, N, P)
+        dbx = jnp.einsum("bn,bhp->bhnp", b_t, x_t * dt_t[..., None])
+        state = state * dec_t[:, :, None, None] + dbx
+        y_t = jnp.einsum("bn,bhnp->bhp", c_t, state)
+        return state, y_t
+
+    state0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(decay.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c.astype(jnp.float32), 1, 0),
+    )
+    _, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B, S, H, P)
+    if d_skip is not None:
+        y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype)

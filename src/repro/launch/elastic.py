@@ -1,0 +1,98 @@
+"""Elastic coordination: heartbeat tracking, straggler/failure exclusion,
+and re-mesh planning.
+
+Control plane for the 1000+ node posture.  Hosts post heartbeats every
+step (the train driver prints them; a supervisor forwards them here).  When
+a host misses ``dead_after`` seconds it is excluded and a new mesh plan is
+computed from the survivors; the data plane then (1) restores the latest
+committed checkpoint with ``Checkpointer.restore`` onto the new mesh —
+checkpoints are topology-agnostic, so any (pod, data, model) factorisation
+works — and (2) resumes from the deterministic-by-step data pipeline with
+no data-service state.  Straggler mitigation: hosts whose step latency
+exceeds ``straggler_factor`` x the fleet median are flagged and excluded at
+the next planned re-mesh rather than immediately (avoids thrash).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: str
+    last_heartbeat: float
+    last_step: int = -1
+    step_latency: float = 0.0
+    excluded: bool = False
+
+
+class ElasticCoordinator:
+    def __init__(self, n_hosts: int, chips_per_host: int = 4,
+                 dead_after: float = 60.0, straggler_factor: float = 2.0,
+                 clock=time.monotonic):
+        self.chips_per_host = chips_per_host
+        self.dead_after = dead_after
+        self.straggler_factor = straggler_factor
+        self.clock = clock
+        now = clock()
+        self.hosts = {f"host{i:04d}": HostState(f"host{i:04d}", now)
+                      for i in range(n_hosts)}
+        self.generation = 0
+
+    # ---------------------------------------------------------- heartbeats
+    def heartbeat(self, host_id: str, step: int,
+                  step_latency: float = 0.0) -> None:
+        h = self.hosts[host_id]
+        h.last_heartbeat = self.clock()
+        h.last_step = step
+        h.step_latency = step_latency
+
+    # ------------------------------------------------------------- health
+    def dead_hosts(self) -> list:
+        now = self.clock()
+        return [h.host_id for h in self.hosts.values()
+                if not h.excluded
+                and now - h.last_heartbeat > self.dead_after]
+
+    def stragglers(self) -> list:
+        lats = sorted(h.step_latency for h in self.hosts.values()
+                      if not h.excluded and h.step_latency > 0)
+        if len(lats) < 4:
+            return []
+        median = lats[len(lats) // 2]
+        return [h.host_id for h in self.hosts.values()
+                if not h.excluded
+                and h.step_latency > self.straggler_factor * median]
+
+    # --------------------------------------------------------------- plan
+    def alive_chips(self) -> int:
+        return sum(self.chips_per_host for h in self.hosts.values()
+                   if not h.excluded)
+
+    def plan_mesh(self) -> Optional[dict]:
+        """Largest (data, model) factorisation that fits the healthy chips.
+        model axis is kept at 16 where possible (weights must still fit);
+        data absorbs the shrink — the batch is re-sharded, not resized."""
+        chips = self.alive_chips()
+        model = 16 if chips >= 16 else chips
+        data = chips // model
+        if data == 0:
+            return None
+        # power-of-two data axis keeps the FSDP collectives balanced
+        data = 2 ** int(math.log2(data))
+        return {"mesh_shape": (data, model), "axes": ("data", "model"),
+                "chips_used": data * model, "generation": self.generation}
+
+    def handle_failures(self) -> Optional[dict]:
+        """Exclude dead hosts + known stragglers; return a new mesh plan if
+        anything changed, else None."""
+        to_exclude = set(self.dead_hosts()) | set(self.stragglers())
+        if not to_exclude:
+            return None
+        for hid in to_exclude:
+            self.hosts[hid].excluded = True
+        self.generation += 1
+        return self.plan_mesh()

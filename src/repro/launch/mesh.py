@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first jax use.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
+    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+    n = n_devices or len(jax.devices())
+    if multi_pod and n >= 8:
+        return jax.make_mesh((2, 2, n // 4), ("pod", "data", "model"))
+    if n == 1:
+        return jax.make_mesh((1, 1), ("data", "model"))
+    return jax.make_mesh((n // 2, 2), ("data", "model"))

@@ -1,0 +1,6 @@
+"""Model zoo: the 10 assigned architectures across 5 families."""
+from . import api  # noqa: F401
+from .config import (  # noqa: F401
+    SHAPES, ArchConfig, MLAConfig, MoEConfig, RGLRUConfig, ShapeConfig,
+    SSMConfig,
+)

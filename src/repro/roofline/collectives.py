@@ -1,0 +1,64 @@
+"""Collective-byte extraction from optimized HLO text.
+
+``cost_analysis()`` has no collective term, so we parse the compiled module:
+sum the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction.  SPMD-partitioned HLO shapes
+are per-device, and the while-loop (scan) body appears once — callers apply
+the same L-correction they use for FLOPs.
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ag = bf16[4,1024,128]{2,1,0} all-gather(%x), ...
+_INSTR_RE = re.compile(
+    r"=\s*((?:\(|)[a-z0-9]+\[[^=]*?)\s*"
+    r"(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> float:
+    """Sum of output-shape bytes over all collective instructions (per
+    device).  `-done` ops are skipped so async pairs count once."""
+    total = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        if f"{m.group(2)}-done(" in line:
+            continue
+        total += _shape_bytes(m.group(1))
+    return float(total)
+
+
+def collective_op_counts(hlo_text: str) -> dict:
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m or f"{m.group(2)}-done(" in line:
+            continue
+        out[m.group(2)] = out.get(m.group(2), 0) + 1
+    return out

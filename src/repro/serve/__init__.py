@@ -1,0 +1,1 @@
+from .engine import Engine, Request  # noqa: F401

@@ -1,0 +1,127 @@
+"""Continuous-batching serving engine.
+
+Slot-based scheduler over the family-generic model API: new requests are
+prefilled one at a time into a free slot of the shared padded cache;
+every engine tick runs one fused decode step across all active slots;
+finished requests free their slot immediately (no head-of-line blocking).
+This is the serving analogue of the paper's evaluation loop — sequential
+admission, batched execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new: int = 16
+    eos_id: Optional[int] = None
+    generated: list = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+
+    @property
+    def done(self) -> bool:
+        if self.eos_id is not None and self.generated \
+                and self.generated[-1] == self.eos_id:
+            return True
+        return len(self.generated) >= self.max_new
+
+
+def _batch_axis(key: str) -> int:
+    return 0 if key == "len" else 1
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_seq: int = 512, prefill_pad: int = 1):
+        assert not cfg.encoder_only, "encoder-only models cannot serve"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.prefill_pad = prefill_pad
+        self.cache = api.init_cache(cfg, slots, max_seq,
+                                    dtype=jnp.dtype(cfg.param_dtype))
+        self.free = deque(range(slots))
+        self.active: dict[int, Request] = {}
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+
+        self._prefill = jax.jit(
+            lambda p, b: api.prefill(p, cfg, b, max_seq))
+        self._decode = jax.jit(
+            lambda p, c, t: api.decode_step(p, cfg, c, t))
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        while self.queue and self.free:
+            req = self.queue.popleft()
+            slot = self.free.popleft()
+            req.slot = slot
+            s = len(req.prompt)
+            pad = -s % self.prefill_pad
+            toks = np.pad(req.prompt, (0, pad))
+            batch = {"tokens": jnp.asarray(toks, jnp.int32)[None]}
+            if self.cfg.mrope:
+                pos = jnp.arange(toks.shape[0], dtype=jnp.int32)[None]
+                batch["positions"] = jnp.stack([pos, pos * 0, pos * 0], 0)
+            logits, cache1 = self._prefill(self.params, batch)
+            cache1 = dict(cache1)
+            cache1["len"] = jnp.full((1,), s + pad, jnp.int32)
+            self._write_slot(slot, cache1)
+            if pad == 0:   # last-position logits are the first new token
+                req.generated.append(int(jnp.argmax(logits[0])))
+            self.active[slot] = req
+
+    def _write_slot(self, slot: int, cache1) -> None:
+        def put(dst, src, key):
+            ax = _batch_axis(key)
+            idx = [slice(None)] * dst.ndim
+            idx[ax] = slice(slot, slot + 1)
+            return dst.at[tuple(idx)].set(src)
+
+        self.cache = {k: put(self.cache[k], cache1[k], k)
+                      for k in self.cache}
+
+    # --------------------------------------------------------------- tick
+    def tick(self) -> int:
+        """Admit, run one decode step for all active slots, retire done."""
+        self._admit()
+        if not self.active:
+            return 0
+        tokens = np.zeros((self.slots,), np.int32)
+        for slot, req in self.active.items():
+            tokens[slot] = (req.generated[-1] if req.generated
+                            else req.prompt[-1])
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for slot in list(self.active):
+            req = self.active[slot]
+            req.generated.append(int(nxt[slot]))
+            if req.done:
+                del self.active[slot]
+                self.free.append(slot)
+                self.finished.append(req)
+        return len(self.active)
+
+    def run(self, max_ticks: int = 1000) -> list:
+        ticks = 0
+        while (self.queue or self.active) and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return self.finished

@@ -1,0 +1,3 @@
+from .step import (  # noqa: F401
+    make_decode_step, make_loss, make_prefill_step, make_train_step,
+)

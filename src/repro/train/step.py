@@ -1,0 +1,107 @@
+"""The jitted train / prefill / decode step factories.
+
+``make_train_step`` returns the exact function the dry-run lowers for
+``train_*`` shapes: forward + backward + AdamW update, with params and
+optimizer state donated (in-place buffers — this is what makes the
+memory_analysis numbers honest)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.optim import adamw, schedule
+
+
+def make_loss(cfg):
+    def loss(params, batch):
+        return api.loss_fn(params, cfg, batch)
+    return loss
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    """Reshape every batch leaf to (n, B/n, ...); mrope positions carry the
+    batch on axis 1."""
+    def split(key, x):
+        ax = 1 if key == "positions" else 0
+        assert x.shape[ax] % n == 0, (key, x.shape, n)
+        new = x.shape[:ax] + (n, x.shape[ax] // n) + x.shape[ax + 1:]
+        x = x.reshape(new)
+        return jnp.moveaxis(x, ax, 0) if ax else x
+    return {k: split(k, v) for k, v in batch.items()}
+
+
+def make_train_step(cfg, *, peak_lr: float = 3e-4, warmup_steps: int = 100,
+                    total_steps: int = 10_000,
+                    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                    microbatches: int = 1):
+    """Forward+backward+AdamW.  microbatches > 1 scans gradient
+    accumulation over batch slices (activation/dispatch memory scales down
+    by the factor; the f32 gradient accumulator inherits the FSDP parameter
+    sharding)."""
+    loss_fn = make_loss(cfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch, step):
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            mb = _split_microbatches(batch, microbatches)
+
+            def body(acc, mbatch):
+                (l, m), g = grads_of(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+                return acc, (l, m)
+
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            gsum, (losses, ms) = jax.lax.scan(body, acc0, mb)
+            grads = jax.tree.map(
+                lambda g, p: (g / microbatches).astype(p.dtype), gsum, params)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, ms)
+        lr = schedule.cosine_with_warmup(
+            step, peak_lr=peak_lr, warmup_steps=warmup_steps,
+            total_steps=total_steps)
+        params, opt_state, opt_metrics = adamw.update(
+            grads, opt_state, params, lr, opt_cfg)
+        metrics = dict(metrics, loss=loss, lr=lr, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, max_seq: int, microbatches: int = 1):
+    """Prefill; microbatches > 1 scans batch slices (chunked admission) so
+    MoE-dispatch/attention transients shrink while the returned cache is the
+    full batch."""
+    def prefill_step(params, batch):
+        if microbatches == 1:
+            return api.prefill(params, cfg, batch, max_seq)
+        mb = _split_microbatches(batch, microbatches)
+
+        def body(_, mbatch):
+            return None, api.prefill(params, cfg, mbatch, max_seq)
+
+        _, (logits, cache) = jax.lax.scan(body, None, mb)
+
+        def merge(key, x):      # (n, ..., B/n, ...) -> (..., B, ...)
+            ax = 0 if key in ("len", "_logits") else 1
+            x = jnp.moveaxis(x, 0, ax)
+            return x.reshape(x.shape[:ax] + (-1,) + x.shape[ax + 2:])
+
+        logits = merge("_logits", logits)
+        cache = {k: merge(k, v) for k, v in cache.items()} if cache else None
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def serve_step(params, cache, tokens):
+        return api.decode_step(params, cfg, cache, tokens)
+    return serve_step

@@ -1,0 +1,9 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the real single
+CPU device; multi-device tests spawn subprocesses with their own flags."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

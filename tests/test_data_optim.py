@@ -1,0 +1,71 @@
+"""Data-pipeline determinism + optimizer behaviour + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import AdamWConfig, adamw, schedule
+
+
+def test_batches_deterministic_by_step():
+    cfg = DataConfig(vocab=100, seq_len=32, global_batch=4)
+    a = SyntheticLM(cfg).at_step(17)
+    b = SyntheticLM(cfg).at_step(17)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLM(cfg).at_step(18)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_shards_are_disjoint_and_restart_safe():
+    cfg = DataConfig(vocab=1000, seq_len=16, global_batch=8)
+    s0 = SyntheticLM(cfg, shard_index=0, shard_count=2)
+    s1 = SyntheticLM(cfg, shard_index=1, shard_count=2)
+    b0, b1 = s0.at_step(5), s1.at_step(5)
+    assert b0["tokens"].shape == (4, 16)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    np.testing.assert_array_equal(b0["tokens"], s0.at_step(5)["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab=50, seq_len=16, global_batch=2)
+    b = SyntheticLM(cfg).at_step(0)
+    # label[t] is the next token: with copy structure this holds often but
+    # structurally: labels come from the same stream, one position ahead
+    assert b["tokens"].shape == b["labels"].shape
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw.init(params)
+    cfg = AdamWConfig(weight_decay=0.0, clip_norm=1e9)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw.update(grads, state, params, 0.05, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros((4,))}
+    state = adamw.init(params)
+    cfg = AdamWConfig(clip_norm=1.0, weight_decay=0.0)
+    _, _, metrics = adamw.update({"w": jnp.full((4,), 1e6)}, state, params,
+                                 1e-3, cfg)
+    assert metrics["grad_norm"] > 1e5  # reported raw
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(schedule.cosine_with_warmup(
+        jnp.int32(s), peak_lr=1.0, warmup_steps=10, total_steps=100))
+        for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0 + 1e-6
+    assert abs(max(lrs) - 1.0) < 0.1
+    assert lrs[-1] < 0.2
+
+
+def test_bf16_params_stay_bf16():
+    params = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    state = adamw.init(params)
+    new_params, _, _ = adamw.update({"w": jnp.ones((8, 8), jnp.bfloat16)},
+                                    state, params, 1e-2)
+    assert new_params["w"].dtype == jnp.bfloat16
+    assert state["m"]["w"].dtype == jnp.float32

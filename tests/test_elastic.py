@@ -1,0 +1,47 @@
+"""Elastic coordinator: failure exclusion, straggler detection, re-mesh."""
+from repro.launch.elastic import ElasticCoordinator
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_dead_host_triggers_remesh():
+    clk = FakeClock()
+    co = ElasticCoordinator(n_hosts=128, chips_per_host=4, dead_after=60,
+                            clock=clk)
+    plan0 = co.plan_mesh()
+    assert plan0["chips_used"] == 512
+    clk.t = 50
+    for h in list(co.hosts)[1:]:
+        co.heartbeat(h, step=10, step_latency=1.0)
+    clk.t = 100                      # only host0's last beat exceeds dead_after
+    assert co.dead_hosts() == ["host0000"]
+    plan = co.handle_failures()
+    assert plan is not None
+    assert plan["chips_used"] <= 127 * 4
+    assert plan["mesh_shape"][1] == 16           # model axis preserved
+    assert co.handle_failures() is None          # idempotent
+
+
+def test_straggler_detection():
+    clk = FakeClock()
+    co = ElasticCoordinator(n_hosts=16, dead_after=1e9, clock=clk)
+    for i, h in enumerate(co.hosts):
+        co.heartbeat(h, step=5, step_latency=5.0 if i == 3 else 1.0)
+    assert co.stragglers() == ["host0003"]
+    plan = co.handle_failures()
+    assert co.hosts["host0003"].excluded
+    # 15 hosts * 4 chips = 60 -> model 16 x data 3 -> pow2 data 2 -> 32 chips
+    assert plan["chips_used"] == 32
+
+
+def test_shrink_below_model_axis():
+    clk = FakeClock()
+    co = ElasticCoordinator(n_hosts=3, chips_per_host=4, clock=clk)
+    plan = co.plan_mesh()
+    assert plan["mesh_shape"] == (1, 12) or plan["mesh_shape"][0] >= 1

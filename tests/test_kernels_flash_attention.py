@@ -1,0 +1,47 @@
+"""Pallas flash-attention kernels vs oracle: shape/dtype/GQA/window sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _qkv(rng, b, hq, hkv, s, d, dtype):
+    q = jnp.asarray(rng.standard_normal((b, hq, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    return q.astype(dtype), k.astype(dtype), v.astype(dtype)
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (1, 2, 1, 128, 64), (2, 4, 2, 256, 64), (1, 4, 4, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prefill_causal(rng, b, hq, hkv, s, d, dtype):
+    q, k, v = _qkv(rng, b, hq, hkv, s, d, dtype)
+    want = ref.attention(q, k, v, causal=True).astype(jnp.float32)
+    got = ops.attention(q, k, v, causal=True, block_q=64,
+                        block_k=64).astype(jnp.float32)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=atol)
+
+
+def test_prefill_local_window(rng):
+    q, k, v = _qkv(rng, 2, 2, 1, 256, 64, jnp.float32)
+    want = ref.attention(q, k, v, causal=True, window=64)
+    got = ops.attention(q, k, v, causal=True, window=64, block_q=64,
+                        block_k=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_vs_ref(rng, dtype):
+    b, hq, hkv, s, d = 3, 4, 2, 384, 64
+    q = jnp.asarray(rng.standard_normal((b, hq, d)), jnp.float32).astype(dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32).astype(dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32).astype(dtype)
+    kv_len = jnp.array([100, 384, 7], jnp.int32)
+    want = ref.decode_attention(q, k, v, kv_len).astype(jnp.float32)
+    got = ops.decode_attention(q, k, v, kv_len, block_k=128).astype(jnp.float32)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=atol)

@@ -1,0 +1,65 @@
+"""Allclose sweeps for the paper's target kernel vs the pure-jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _problem(rng, m, k, n, dtype):
+    a32 = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b32 = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    aq, a_s = ref.quantize_blockwise(a32, dtype)
+    bq, b_s = ref.quantize_blockwise_2d(b32, dtype)
+    return aq, bq, a_s, b_s
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128), (256, 384, 128), (128, 512, 256), (384, 256, 384),
+])
+@pytest.mark.parametrize("dtype", [jnp.float8_e4m3fn, jnp.int8])
+def test_blocked_matches_ref(rng, m, k, n, dtype):
+    aq, bq, a_s, b_s = _problem(rng, m, k, n, dtype)
+    want = ref.scaled_gemm(aq, bq, a_s, b_s).astype(jnp.float32)
+    got = ops.scaled_gemm(aq, bq, a_s, b_s, block_m=128, block_n=128,
+                          block_k=128).astype(jnp.float32)
+    scale = float(jnp.max(jnp.abs(want))) or 1.0
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=0.02 * scale)
+
+
+@pytest.mark.parametrize("grid_order", ["mn", "nm"])
+@pytest.mark.parametrize("scale_application", ["scale_acc", "dequant_inputs"])
+def test_genome_axes_all_agree(rng, grid_order, scale_application):
+    aq, bq, a_s, b_s = _problem(rng, 256, 256, 256, jnp.float8_e4m3fn)
+    want = ref.scaled_gemm(aq, bq, a_s, b_s).astype(jnp.float32)
+    got = ops.scaled_gemm(aq, bq, a_s, b_s, block_m=128, block_n=128,
+                          block_k=128, grid_order=grid_order,
+                          scale_application=scale_application
+                          ).astype(jnp.float32)
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=0.02 * scale)
+
+
+def test_unaligned_shapes_padded(rng):
+    # M, N, K not multiples of the block: ops.py pads
+    aq, bq, a_s, b_s = _problem(rng, 256, 256, 384, jnp.float8_e4m3fn)
+    aq, a_s = aq[:200], a_s[:200]
+    want = ref.scaled_gemm(aq, bq, a_s, b_s).astype(jnp.float32)
+    got = ops.scaled_gemm(aq, bq, a_s, b_s, block_m=128, block_n=256,
+                          block_k=128).astype(jnp.float32)
+    assert got.shape == want.shape == (200, 384)
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=0.02 * scale)
+
+
+def test_naive_monolith_matches(rng):
+    from repro.kernels.scaled_gemm import naive_scaled_gemm
+    aq, bq, a_s, b_s = _problem(rng, 128, 256, 128, jnp.float8_e4m3fn)
+    want = ref.scaled_gemm(aq, bq, a_s, b_s).astype(jnp.float32)
+    got = naive_scaled_gemm(aq, bq, a_s, b_s).astype(jnp.float32)
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=0.02 * scale)

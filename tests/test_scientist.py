@@ -1,0 +1,144 @@
+"""The Kernel Scientist loop: stage schemas, the pick-3 rule, platform
+feedback, sequential enforcement, persistence, and end-to-end discovery."""
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codegen, designer, prompts
+from repro.core.evaluator import EvaluationService
+from repro.core.genome import SEED_MONOLITH
+from repro.core.llm import ScriptedLLM
+from repro.core.population import BENCH_CONFIGS_18, Population, geomean
+from repro.core.scientist import KernelScientist
+
+
+@pytest.fixture(scope="module")
+def sci():
+    s = KernelScientist(llm=ScriptedLLM(), service=EvaluationService())
+    s.run(generations=3)
+    return s
+
+
+def test_seeds_match_paper(sci):
+    recs = list(sci.population)[:3]
+    assert [r.rid for r in recs] == ["00001", "00002", "00003"]
+    lib, naive, mxu = recs
+    assert lib.genome.style == "library"
+    # paper §3: the direct translation is ~6x slower than the library path
+    assert 3.0 < naive.score / lib.score < 10.0
+
+
+def test_selector_schema(sci):
+    sel = sci.logbook[0].selection
+    assert set(sel) == {"basis_code", "basis_reference", "rationale"}
+    assert sel["basis_code"] in {r.rid for r in sci.population}
+    assert len(sel["rationale"]) > 40
+
+
+def test_designer_emits_10_avenues_and_5_plans():
+    s = KernelScientist(llm=ScriptedLLM(), service=EvaluationService())
+    s.seed()
+    from repro.core import selector as sel_mod
+    sel = sel_mod.select(s.population, s.llm)
+    plans = designer.design(s.population, sel.basis_code,
+                            sel.basis_reference, s.llm)
+    assert 1 <= len(plans) <= 5
+    for p in plans:
+        assert {"description", "rubric", "performance",
+                "innovation"} <= set(p)
+        lo, hi = p["performance"]
+        assert lo <= hi
+
+
+perf = st.tuples(st.integers(-30, 80), st.integers(-30, 90)).map(
+    lambda t: [min(t), max(t)])
+plan = st.fixed_dictionaries({
+    "description": st.text(min_size=1, max_size=8),
+    "performance": perf,
+    "innovation": st.integers(0, 100),
+})
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(plan, min_size=3, max_size=5))
+def test_pick3_rule_properties(plans):
+    chosen = designer.pick3(plans)
+    assert len(chosen) == 3
+    assert len({id(c) for c in chosen}) == 3          # without replacement
+    assert chosen[0]["innovation"] == max(p["innovation"] for p in plans)
+    rest = [p for p in plans if p is not chosen[0]]
+    assert chosen[1]["performance"][1] == max(
+        p["performance"][1] for p in rest)
+
+
+def test_population_lineage_and_persistence(tmp_path, sci):
+    pop = sci.population
+    best = pop.best()
+    if best.parents:
+        assert best.parents[0] in pop.ancestors(best.rid)
+    pop.save(tmp_path / "pop.json")
+    loaded = Population.load(tmp_path / "pop.json")
+    assert len(loaded) == len(pop)
+    assert loaded.best().rid == best.rid
+    assert loaded.best().timings_us == best.timings_us
+
+
+def test_loop_improves_over_seeds(sci):
+    seed_best = min(r.score for r in list(sci.population)[:3])
+    assert sci.population.best().score <= seed_best
+    traj = sci.trajectory()
+    vals = [t for _, t in traj]
+    assert vals == sorted(vals, reverse=True)         # monotone best-so-far
+
+
+def test_platform_rejects_broken_source():
+    svc = EvaluationService()
+    res = svc.submit("this is not python !!")
+    assert res.status == "compile_error"
+    res = svc.submit("x = 1\n")   # no run()
+    assert res.status == "compile_error"
+
+
+def test_platform_rejects_vmem_oom_monolith():
+    svc = EvaluationService()
+    src = codegen.render_source(SEED_MONOLITH)
+    res = svc.submit(src)
+    assert res.status == "compile_error"
+    assert "RESOURCE_EXHAUSTED" in res.error
+
+
+def test_platform_rejects_wrong_answers():
+    svc = EvaluationService()
+    src = ('GENOME = None\n'
+           'import jax.numpy as jnp\n'
+           'def run(a, b, a_scale, b_scale, interpret=True):\n'
+           '    return jnp.zeros((a.shape[0], b.shape[1]), jnp.bfloat16)\n')
+    res = svc.submit(src)
+    assert res.status == "incorrect"
+
+
+def test_sequential_submission_enforced():
+    svc = EvaluationService()
+    svc._lock.acquire()
+    try:
+        with pytest.raises(RuntimeError, match="sequential"):
+            svc.submit("x = 1")
+    finally:
+        svc._lock.release()
+
+
+def test_noise_is_deterministic():
+    a = EvaluationService(noise=0.02, seed=7)
+    b = EvaluationService(noise=0.02, seed=7)
+    src = codegen.render_source(
+        __import__("repro.core.genome", fromlist=["SEED_MXU"]).SEED_MXU)
+    ra, rb = a.submit(src), b.submit(src)
+    assert ra.timings_us == rb.timings_us
+    c = EvaluationService(noise=0.02, seed=8)
+    assert c.submit(src).timings_us != ra.timings_us
+
+
+def test_geomean():
+    assert geomean([1.0, 100.0]) == pytest.approx(10.0)
+    assert geomean([]) == float("inf")
