@@ -1,0 +1,20 @@
+"""Distribution subsystem: mesh registry, sharding-spec inference, and
+compressed cross-pod collectives.
+
+``partition`` is the single place the rest of the codebase asks "how is
+this tensor laid out on the current mesh?" — models call ``shard_named`` /
+``shard_activation`` on activations, launchers call ``param_specs`` /
+``batch_specs`` / ``cache_specs`` to place whole pytrees.  ``compression``
+implements int8 error-feedback gradient averaging over the ``pod`` axis
+(the slow inter-pod links are the one place quantising the wire pays).
+"""
+from . import compression, partition
+from .partition import (
+    batch_specs, cache_specs, get_mesh, param_specs, set_mesh,
+    shard_activation, shard_named,
+)
+
+__all__ = [
+    "compression", "partition", "set_mesh", "get_mesh", "shard_named",
+    "shard_activation", "param_specs", "batch_specs", "cache_specs",
+]

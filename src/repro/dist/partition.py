@@ -1,0 +1,269 @@
+"""Process-wide mesh registry + sharding-spec inference.
+
+Two layers of API:
+
+* **Inside traced model code** — ``shard_named(x, ("D", "T", "-", "-"))``
+  attaches a ``with_sharding_constraint`` built from a compact axis tuple:
+  ``"D"`` = batch-like (the ``data`` axis, folded with ``pod`` when both
+  exist), ``"T"`` = tensor-parallel (the ``model`` axis), ``"-"`` =
+  replicated.  When no mesh is registered (single-device tests, CPU smoke)
+  every call is a strict no-op, so the single-device path is untouched.
+
+* **At launch time** — ``param_specs`` / ``batch_specs`` / ``cache_specs``
+  walk a pytree and return a matching tree of ``PartitionSpec``; the
+  launchers wrap those in ``NamedSharding`` for ``device_put`` /
+  ``in_shardings``.
+
+Every axis assignment is divisibility-checked against the mesh, so the
+same inference runs unchanged on the ``(16, 16)`` production mesh, the
+``(2, 2, 2)`` debug mesh, and a ``(1, 1)`` single-device mesh (where it
+degenerates to full replication).  Specs only ever read ``mesh.shape``,
+so any mesh-shaped mapping (including an abstract stand-in) works for
+spec inference; a concrete ``jax.sharding.Mesh`` is needed only once the
+specs are turned into ``NamedSharding``s.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Current-mesh registry
+# ---------------------------------------------------------------------------
+_CURRENT_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    """Register `mesh` as the process-wide current mesh (None clears it)."""
+    global _CURRENT_MESH
+    _CURRENT_MESH = mesh
+
+
+def get_mesh():
+    return _CURRENT_MESH
+
+
+# ---------------------------------------------------------------------------
+# Axis resolution
+# ---------------------------------------------------------------------------
+def _axis_sizes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def _data_axes(mesh, dim_size: int) -> Optional[tuple]:
+    """Mesh axes to shard a batch-like dim over: (pod, data) folded when the
+    product divides, else whichever single axis divides, else None."""
+    sizes = _axis_sizes(mesh)
+    pod, data = sizes.get("pod", 0), sizes.get("data", 0)
+    if pod > 1 and data > 1 and dim_size % (pod * data) == 0:
+        return ("pod", "data")
+    if data > 1 and dim_size % data == 0:
+        return ("data",)
+    if pod > 1 and dim_size % pod == 0:
+        return ("pod",)
+    return None
+
+
+def _entry(axes: Optional[tuple]):
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+# ---------------------------------------------------------------------------
+# In-graph constraints
+# ---------------------------------------------------------------------------
+def shard_named(x, axes: Sequence[str]):
+    """Constrain `x` per a compact axis tuple ("D" | "T" | "-") — one tag
+    per array dim.  No-op when no mesh is registered; tags that do not
+    divide (or whose mesh axis is absent / already used) fall back to
+    replicated for that dim."""
+    mesh = _CURRENT_MESH
+    if mesh is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    sizes = _axis_sizes(mesh)
+    used: set = set()
+    spec = []
+    for dim, tag in zip(x.shape, axes):
+        entry = None
+        if tag in ("D", "data"):
+            data = _data_axes(mesh, dim)
+            if data and not (set(data) & used):
+                entry = _entry(data)
+                used |= set(data)
+        elif tag in ("T", "model"):
+            m = sizes.get("model", 0)
+            if m > 1 and dim % m == 0 and "model" not in used:
+                entry = "model"
+                used.add("model")
+        elif tag != "-":
+            raise ValueError(f"unknown shard tag {tag!r}")
+        spec.append(entry)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def shard_activation(x):
+    """Batch-major activation constraint: dim 0 over the data axes."""
+    mesh = _CURRENT_MESH
+    if mesh is None:
+        return x
+    data = _data_axes(mesh, x.shape[0])
+    if data is None:
+        return x
+    spec = [_entry(data)] + [None] * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Pytree spec inference
+# ---------------------------------------------------------------------------
+# Top-level keys whose leaves carry a leading stacked-layer dim (never
+# sharded: the scan carries it).
+_STACKED_KEYS = ("layers", "dense_layers", "super", "tail")
+# Row-parallel weights: shard the *input* (second-to-last) dim so the
+# column-parallel -> row-parallel pair needs one reduce, no resharding.
+# embed/unembed live here because their first dim is the vocab dim.
+_ROW_PARALLEL = ("wo", "w_down", "w_out", "ws_down", "embed", "unembed")
+# MoE expert stacks (E, d_in, d_out): expert-parallel over `model`.
+_EXPERT_STACKS = ("w_gate", "w_up", "w_down")
+
+# Leaves whose per-layer body is smaller than this stay replicated: norms,
+# biases, router tables — the all-gather would cost more than it saves.
+MIN_SHARD_ELEMS = 4096
+# FSDP (second dim over `data`) only pays off for genuinely large weights.
+FSDP_MIN_ELEMS = 1 << 20
+
+
+def _path_keys(path) -> list:
+    keys = []
+    for k in path:
+        if hasattr(k, "key"):
+            keys.append(str(k.key))
+        elif hasattr(k, "idx"):
+            keys.append(str(k.idx))
+        else:  # pragma: no cover - future key types
+            keys.append(str(k))
+    return keys
+
+
+def param_specs(params, mesh, mode: str = "train"):
+    """PartitionSpec tree for a parameter pytree.
+
+    mode="train": large matmul weights tensor-parallel over ``model``, with
+    an FSDP shard of the other dim over ``data`` for very large leaves (the
+    AdamW moment trees inherit these specs, so optimizer state is sharded).
+    mode="serve": weight-stationary wide TP — the TP dim is folded over
+    (``data``, ``model``) when it divides, so decode never re-gathers
+    weights per token.  Small leaves replicate; the ``pod`` axis is always
+    pure data-parallel for parameters.
+    """
+    assert mode in ("train", "serve"), mode
+    sizes = _axis_sizes(mesh)
+    msize = sizes.get("model", 0)
+    dsize = sizes.get("data", 0)
+
+    def tp_axes(dim_size: int):
+        """Axes for the tensor-parallel dim, widest first in serve mode."""
+        if mode == "serve" and msize > 1 and dsize > 1 \
+                and dim_size % (msize * dsize) == 0:
+            return ("data", "model")
+        if msize > 1 and dim_size % msize == 0:
+            return ("model",)
+        return None
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        shape = tuple(leaf.shape)
+        off = 1 if keys and keys[0] in _STACKED_KEYS else 0
+        body = shape[off:]
+        name = keys[-1] if keys else ""
+        if len(body) < 2 or math.prod(body) < MIN_SHARD_ELEMS:
+            return P()
+        spec = [None] * len(shape)
+
+        # MoE expert stacks: expert-parallel over `model` on the E dim.
+        if len(body) == 3 and "moe" in keys and name in _EXPERT_STACKS:
+            if msize > 1 and body[0] % msize == 0:
+                spec[off] = "model"
+            if mode == "train" and dsize > 1 \
+                    and math.prod(body) >= FSDP_MIN_ELEMS \
+                    and body[2] % dsize == 0:
+                spec[off + 2] = "data"
+            return P(*spec)
+
+        a, b = len(shape) - 2, len(shape) - 1
+        tp_dim, other = (a, b) if name in _ROW_PARALLEL else (b, a)
+        axes = tp_axes(shape[tp_dim])
+        if axes is None:  # fall back to the other dim
+            axes = tp_axes(shape[other])
+            if axes is None:
+                return P()
+            tp_dim, other = other, tp_dim
+        spec[tp_dim] = _entry(axes)
+        if mode == "train" and dsize > 1 and other >= off \
+                and "data" not in axes \
+                and math.prod(body) >= FSDP_MIN_ELEMS \
+                and shape[other] % dsize == 0:
+            spec[other] = "data"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_specs(batch, mesh):
+    """Batch-like leaves over the data axes.  The batch dim is axis 0,
+    except mrope ``positions`` (3, B, S) which carries it on axis 1."""
+    def one(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        shape = tuple(leaf.shape)
+        ax = 1 if name == "positions" else 0
+        if len(shape) <= ax:
+            return P()
+        data = _data_axes(mesh, shape[ax])
+        if data is None:
+            return P()
+        spec = [None] * len(shape)
+        spec[ax] = _entry(data)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_specs(cache, mesh):
+    """Decode/prefill cache layout: batch dim (axis 1; ``len`` is (B,))
+    over the data axes, plus static channel dims over ``model`` where they
+    divide — KV heads for attention caches, the latent dim for MLA, SSD
+    state heads for mamba."""
+    sizes = _axis_sizes(mesh)
+    msize = sizes.get("model", 0)
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        shape = tuple(leaf.shape)
+        ax = 0 if name == "len" or len(shape) == 1 else 1
+        spec = [None] * len(shape)
+        if len(shape) > ax:
+            data = _data_axes(mesh, shape[ax])
+            if data:
+                spec[ax] = _entry(data)
+        if msize > 1:
+            if name in ("k", "v") and len(shape) == 5 \
+                    and shape[3] % msize == 0:
+                spec[3] = "model"          # (L, B, S, Hkv, dh)
+            elif name == "ckv" and len(shape) == 4 \
+                    and shape[3] % msize == 0:
+                spec[3] = "model"          # (L, B, S, kv_lora)
+            elif name == "state" and len(shape) == 5 \
+                    and shape[2] % msize == 0:
+                spec[2] = "model"          # (L, B, H, N, P)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -25,6 +25,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 calls it TPUCompilerParams; newer releases renamed it.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 SCALE_BLOCK = 128
 
 
@@ -151,7 +154,7 @@ def scaled_gemm(
         out_specs=pl.BlockSpec((block_m, block_n), imap_o),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=dimension_semantics),
+        compiler_params=_CompilerParams(dimension_semantics=dimension_semantics),
         interpret=interpret,
     )(a, b, a_scale, b_scale)
 

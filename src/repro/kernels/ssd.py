@@ -18,6 +18,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 calls it TPUCompilerParams; newer releases renamed it.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _ssd_body(dtx_ref, la_ref, b_ref, c_ref, y_ref, state_ref, *, chunk: int):
     ic = pl.program_id(2)
@@ -83,7 +86,7 @@ def ssd(
         out_specs=pl.BlockSpec((1, 1, chunk, p), lambda bb, hh, ic: (bb, hh, ic, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, h, s, p), dtx.dtype),
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -34,6 +34,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.models import SHAPES, api
 from repro.models.config import ArchConfig, ShapeConfig
 from repro.optim import adamw
+from repro.roofline import report
 from repro.roofline.collectives import collective_bytes_from_hlo
 from repro.train import step as train_step_mod
 
@@ -140,7 +141,7 @@ def _lower_costs(cfg: ArchConfig, shape: ShapeConfig, mesh,
     jfn = jax.jit(fn, in_shardings=shardings, out_shardings=out_shardings,
                   donate_argnums=donate)
     compiled = jfn.lower(*args).compile()
-    cost = compiled.cost_analysis()
+    cost = report.flat_cost_analysis(compiled)
     out = {
         "flops": cost.get("flops", 0.0),
         "bytes_accessed": cost.get("bytes accessed", 0.0),

@@ -17,6 +17,17 @@ from repro.models import api
 from repro.serve import Engine, Request
 
 
+def _mesh_shape(text: str) -> tuple:
+    try:
+        d, m = (int(v) for v in text.lower().split("x"))
+        if d < 1 or m < 1:
+            raise ValueError
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected DxM with positive ints, e.g. 2x4 (got {text!r})")
+    return d, m
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=configs.ARCH_IDS, default="qwen2.5-3b")
@@ -26,14 +37,22 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="DxM", type=_mesh_shape,
+                    help="serve on a (data, model) mesh, e.g. 2x4 "
+                         "(needs data*model visible devices)")
     args = ap.parse_args(argv)
+
+    mesh = None
+    if args.mesh:
+        mesh = jax.make_mesh(args.mesh, ("data", "model"))
 
     cfg = configs.get_reduced(args.arch)
     if cfg.encoder_only:
         print(f"{args.arch} is encoder-only: no serving path")
         return 2
     params = api.init_params(cfg, jax.random.key(args.seed))
-    engine = Engine(cfg, params, slots=args.slots, max_seq=args.max_seq)
+    engine = Engine(cfg, params, slots=args.slots, max_seq=args.max_seq,
+                    mesh=mesh)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()

@@ -16,9 +16,16 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.dist import partition
 from repro.models import api
 from repro.models.config import ArchConfig
+
+
+def _named(tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
 
 
 @dataclasses.dataclass
@@ -44,15 +51,27 @@ def _batch_axis(key: str) -> int:
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
-                 max_seq: int = 512, prefill_pad: int = 1):
+                 max_seq: int = 512, prefill_pad: int = 1, mesh=None):
         assert not cfg.encoder_only, "encoder-only models cannot serve"
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.prefill_pad = prefill_pad
+        self.mesh = mesh
         self.cache = api.init_cache(cfg, slots, max_seq,
                                     dtype=jnp.dtype(cfg.param_dtype))
+        if mesh is not None:
+            # register the mesh for in-graph shard_named constraints and
+            # place weights once, weight-stationary (serve-mode wide TP)
+            partition.set_mesh(mesh)
+            self.params = jax.device_put(
+                params,
+                _named(partition.param_specs(params, mesh, mode="serve"),
+                       mesh))
+            self.cache = jax.device_put(
+                self.cache,
+                _named(partition.cache_specs(self.cache, mesh), mesh))
         self.free = deque(range(slots))
         self.active: dict[int, Request] = {}
         self.queue: deque[Request] = deque()

@@ -1,0 +1,139 @@
+"""Minimal deterministic stand-in for `hypothesis` (gated dependency).
+
+The container does not ship hypothesis and nothing may be pip-installed,
+so ``conftest.py`` installs this shim into ``sys.modules`` **only when the
+real package is missing** — with hypothesis available the genuine library
+wins and this file is inert.
+
+Covers exactly the strategy surface the suite uses (integers, sampled_from,
+just, builds, tuples, lists, text, fixed_dictionaries, ``.map``) with a
+seeded ``random.Random``: each ``@given`` test runs ``max_examples``
+deterministic examples, so property tests stay reproducible across runs
+instead of being skipped wholesale.  No shrinking, no database — failures
+report the drawn arguments in the assertion traceback.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import string
+import sys
+import types
+
+_SEED = 0
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred, _tries: int = 1000):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return Strategy(draw)
+
+
+def integers(min_value=-(2 ** 31), max_value=2 ** 31):
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, **_):
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans():
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def just(value):
+    return Strategy(lambda rng: value)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def tuples(*strategies):
+    return Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def lists(elements, min_size=0, max_size=10, **_):
+    return Strategy(lambda rng: [
+        elements.example(rng)
+        for _ in range(rng.randint(min_size, max_size))])
+
+
+def text(alphabet=string.ascii_letters, min_size=0, max_size=10):
+    pool = list(alphabet)
+    return Strategy(lambda rng: "".join(
+        pool[rng.randrange(len(pool))]
+        for _ in range(rng.randint(min_size, max_size))))
+
+
+def fixed_dictionaries(mapping):
+    return Strategy(lambda rng: {
+        k: s.example(rng) for k, s in mapping.items()})
+
+
+def builds(target, *args, **kwargs):
+    return Strategy(lambda rng: target(
+        *(a.example(rng) for a in args),
+        **{k: v.example(rng) for k, v in kwargs.items()}))
+
+
+def given(*strategies, **kw_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*fargs, **fkwargs):
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples", 100))
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                drawn = [s.example(rng) for s in strategies]
+                kdrawn = {k: s.example(rng)
+                          for k, s in kw_strategies.items()}
+                fn(*fargs, *drawn, **dict(fkwargs, **kdrawn))
+        wrapper._shim_given = True
+        # hide the drawn parameters from pytest's fixture resolution: the
+        # remaining (leading) parameters, if any, are genuine fixtures
+        params = list(inspect.signature(fn).parameters.values())
+        keep = params[:max(0, len(params) - len(strategies))]
+        keep = [p for p in keep if p.name not in kw_strategies]
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(keep)
+        return wrapper
+    return decorate
+
+
+def settings(max_examples: int = 100, deadline=None, **_):
+    def decorate(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return decorate
+
+
+def install() -> None:
+    """Register the shim as `hypothesis` / `hypothesis.strategies`."""
+    mod = types.ModuleType("hypothesis")
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "just", "sampled_from",
+                 "tuples", "lists", "text", "fixed_dictionaries", "builds"):
+        setattr(st_mod, name, globals()[name])
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st_mod
+    mod.__shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

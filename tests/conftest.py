@@ -3,7 +3,23 @@ CPU device; multi-device tests spawn subprocesses with their own flags."""
 import numpy as np
 import pytest
 
+try:                                   # gated dependency: use the real
+    import hypothesis                  # noqa: F401  package when present,
+except ImportError:                    # else the deterministic shim
+    import _hypothesis_shim
+    _hypothesis_shim.install()
+
 
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _reset_partition_mesh():
+    """The dist mesh registry is process-global; never leak one test's mesh
+    into the next (a stale mesh turns shard_named into a hard error on the
+    single real device)."""
+    yield
+    from repro.dist import partition
+    partition.set_mesh(None)

@@ -1,0 +1,25 @@
+"""Collection smoke: the whole suite must *import* cleanly.
+
+A single broken import (a missing optional dependency, a renamed jax
+symbol) silently knocks out every test in that module under plain
+``pytest``; this test turns that into one loud failure.  Runs pytest in a
+subprocess so a collection error cannot take this guard down with it.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_collect_only_reports_zero_errors():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=300)
+    out = proc.stdout + proc.stderr
+    assert proc.returncode == 0, f"collection failed:\n{out[-4000:]}"
+    assert "error" not in out.splitlines()[-1].lower(), out[-2000:]
