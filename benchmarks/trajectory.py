@@ -1,19 +1,30 @@
 """Discovery-process curve (paper §4.4): best-so-far geomean per generation,
 plus stage-mix statistics (how many experiments compiled / were incorrect /
 improved) — the observable the paper argues shows 'self-consistent directed
-action'."""
+action'.  The campaign's structured event log (core.events) supplies the
+resilience annotations for the figure: retry/fallback density and per-stage
+latency, i.e. how much of the multi-day wall clock the paper's loop spent
+waiting on the flaky shared queue (§3.4)."""
 from __future__ import annotations
 
-from repro.core import EvaluationService, KernelScientist, ScriptedLLM
+from repro.core import (EvaluationService, FlakyLLM, FlakyService,
+                        KernelScientist, NO_WAIT_POLICY, ScriptedLLM)
 
 
-def run(generations: int = 14, seed: int = 1):
-    sci = KernelScientist(llm=ScriptedLLM(seed=seed),
-                          service=EvaluationService(seed=seed))
+def run(generations: int = 14, seed: int = 1, fault_rate: float = 0.0):
+    llm = ScriptedLLM(seed=seed)
+    service = EvaluationService(seed=seed)
+    if fault_rate:
+        llm = FlakyLLM(llm, seed=seed, error_rate=fault_rate / 2,
+                       malformed_rate=fault_rate / 2)
+        service = FlakyService(service, seed=seed, error_rate=fault_rate)
+    sci = KernelScientist(llm=llm, service=service,
+                          retry_policy=NO_WAIT_POLICY)
     sci.run(generations=generations)
     rows = []
     for gen, best_us in sci.trajectory():
-        rows.append((f"trajectory/gen{gen:02d}_best_us", best_us, ""))
+        if best_us is not None:   # None = no successful kernel yet
+            rows.append((f"trajectory/gen{gen:02d}_best_us", best_us, ""))
     statuses = {}
     for rec in sci.population:
         statuses[rec.status] = statuses.get(rec.status, 0) + 1
@@ -24,4 +35,12 @@ def run(generations: int = 14, seed: int = 1):
         if sci.logbook[i].best_geomean_us < sci.logbook[i - 1].best_geomean_us)
     rows.append(("trajectory/generations_with_improvement", float(improved),
                  f"of {len(sci.logbook)}"))
+
+    # resilience annotations from the structured event log
+    counts = sci.events.counts()
+    rows.append(("trajectory/retries", float(counts.get("retry", 0)), ""))
+    rows.append(("trajectory/fallbacks", float(counts.get("fallback", 0)), ""))
+    for stage, durs in sorted(sci.events.stage_durations().items()):
+        rows.append((f"trajectory/stage_{stage}_mean_s",
+                     sum(durs) / len(durs), f"n={len(durs)}"))
     return rows, sci

@@ -1,12 +1,21 @@
 """Full Kernel Scientist run with persisted artifacts: population JSON,
-generation logbook, and every generated kernel source.
+generation logbook, JSONL event log, and every generated kernel source.
 
     PYTHONPATH=src python examples/kernel_scientist_run.py --generations 20
+
+The campaign checkpoints after every submission, so an interrupted run
+(crash, Ctrl-C, preemption) continues where it left off:
+
+    PYTHONPATH=src python examples/kernel_scientist_run.py --resume
+
+``--fault-rate 0.2`` wraps the backends in the seeded fault injectors to
+rehearse the paper's flaky-shared-queue regime (§3.4) end to end.
 """
 import argparse
 import pathlib
 
-from repro.core import EvaluationService, KernelScientist, ScriptedLLM
+from repro.core import (EvaluationService, FlakyLLM, FlakyService,
+                        KernelScientist, NO_WAIT_POLICY, ScriptedLLM)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--generations", type=int, default=20)
@@ -14,19 +23,43 @@ ap.add_argument("--workdir", default="results/scientist_run")
 ap.add_argument("--noise", type=float, default=0.0,
                 help="benchmark jitter sigma (platform realism)")
 ap.add_argument("--seed", type=int, default=0)
+ap.add_argument("--resume", action="store_true",
+                help="continue the campaign persisted in --workdir")
+ap.add_argument("--fault-rate", type=float, default=0.0,
+                help="injected transient-failure rate for LLM + eval queue")
 args = ap.parse_args()
 
-sci = KernelScientist(
-    llm=ScriptedLLM(seed=args.seed),
-    service=EvaluationService(noise=args.noise, seed=args.seed),
-    workdir=args.workdir)
-best = sci.run(generations=args.generations)
+llm = ScriptedLLM(seed=args.seed)
+service = EvaluationService(noise=args.noise, seed=args.seed)
+if args.fault_rate:
+    llm = FlakyLLM(llm, seed=args.seed, error_rate=args.fault_rate / 2,
+                   malformed_rate=args.fault_rate / 2)
+    service = FlakyService(service, seed=args.seed,
+                           error_rate=args.fault_rate)
+
+if args.resume:
+    sci = KernelScientist.resume(args.workdir, llm=llm, service=service,
+                                 retry_policy=NO_WAIT_POLICY)
+    print(f"resumed: {len(sci.logbook)} generations, "
+          f"{len(sci.population)} kernels already on disk")
+    # --generations is the campaign total; run() counts *additional*
+    # generations (a resumed in-flight generation counts as one of them)
+    todo = max(0, args.generations - len(sci.logbook))
+else:
+    sci = KernelScientist(llm=llm, service=service, workdir=args.workdir,
+                          retry_policy=NO_WAIT_POLICY)
+    todo = args.generations
+best = sci.run(generations=todo)
 
 wd = pathlib.Path(args.workdir)
 (wd / "kernels").mkdir(exist_ok=True)
 for rec in sci.population:
     (wd / "kernels" / f"{rec.rid}.py").write_text(rec.source)
 print(f"best: {best.rid} {best.score:.1f} us | {best.genome.describe()}")
-print(f"artifacts in {wd}/: population.json, logbook.json, kernels/*.py")
+print(f"artifacts in {wd}/: population.json, logbook.json, state.json, "
+      f"events.jsonl, kernels/*.py")
+counts = sci.events.counts()
 print(f"{sci.service.submissions} sequential submissions "
-      f"({len(sci.population)} kernels)")
+      f"({len(sci.population)} kernels), "
+      f"{counts.get('retry', 0)} retries, "
+      f"{counts.get('fallback', 0)} rule-based fallbacks")

@@ -4,6 +4,7 @@ sequential black-box Evaluation) optimizing one complex accelerator kernel,
 adapted MI300/HIP -> TPU v5e/Pallas (see DESIGN.md §2).
 """
 from .evaluator import EvaluationService, estimate_us  # noqa: F401
+from .events import EventLog  # noqa: F401
 from .genome import (  # noqa: F401
     SEED_LIBRARY, SEED_MONOLITH, SEED_MXU, SEED_NAIVE, KernelGenome,
 )
@@ -11,4 +12,8 @@ from .llm import HTTPChatLLM, LLMClient, ScriptedLLM  # noqa: F401
 from .population import (  # noqa: F401
     BENCH_CONFIGS_6, BENCH_CONFIGS_18, KernelRecord, Population,
 )
-from .scientist import KernelScientist  # noqa: F401
+from .resilience import (  # noqa: F401
+    DEFAULT_POLICY, NO_WAIT_POLICY, FlakyLLM, FlakyService, RetryPolicy,
+    TransientError, retry_call,
+)
+from .scientist import GenerationLog, KernelScientist  # noqa: F401

@@ -55,13 +55,65 @@ def design(population: Population, basis_id: str, reference_id: str,
     reply = prompts.extract_reply_json(llm.complete(prompt))
 
     plans = list(reply["experiments"])
+    validate_plans(plans)
+    return plans[:5]
+
+
+def validate_plans(plans: list) -> list:
+    """Schema-check designer output, raising ``ValueError`` on violations.
+
+    Real exceptions, not asserts: ``assert`` vanishes under ``python -O``,
+    which would silently admit malformed plans into the loop.  A raised
+    ``ValueError`` is retryable — the scientist re-asks the LLM, then falls
+    back to :func:`fallback_design`.
+    """
     if len(plans) < 1:
         raise ValueError("designer produced no experiment plans")
     for p in plans:
-        lo, hi = p["performance"]
-        assert lo <= hi, p
-        assert 0 <= int(p["innovation"]) <= 100, p
-    return plans[:5]
+        missing = {"description", "rubric", "performance",
+                   "innovation"} - set(p)
+        if missing:
+            raise ValueError(f"plan missing fields {sorted(missing)}: {p!r}")
+        try:
+            lo, hi = p["performance"]
+        except (TypeError, ValueError):
+            raise ValueError(f"performance must be a [lo, hi] pair: {p!r}")
+        if lo > hi:
+            raise ValueError(f"performance range inverted ({lo} > {hi}): {p!r}")
+        if not 0 <= int(p["innovation"]) <= 100:
+            raise ValueError(f"innovation outside [0, 100]: {p!r}")
+    return plans
+
+
+def fallback_design(population: Population, basis_id: str) -> list:
+    """Deterministic rule-based plans when the LLM designer stays unusable
+    after retries: take the knowledge base's own candidate edits (one per
+    avenue first, for diversity), with performance ranges and innovation
+    scores from the avenue priors.  Keeps the generation alive instead of
+    aborting the campaign."""
+    def plan(cand):
+        prior = int(cand["innovation_prior"])
+        return {
+            "description": ("[fallback/" + cand["avenue"] + "] "
+                            + cand["rubric"].splitlines()[0]),
+            "rubric": cand["rubric"],
+            "performance": [0, max(5, prior // 2)],
+            "innovation": prior,
+            "genome_edit": cand["genome_edit"],
+        }
+
+    cands = _candidate_edits(population.get(basis_id).genome)
+    plans, seen_avenues = [], set()
+    for cand in cands:                        # one plan per avenue first
+        if len(plans) < 5 and cand["avenue"] not in seen_avenues:
+            seen_avenues.add(cand["avenue"])
+            plans.append(plan(cand))
+    for cand in cands:                        # backfill to 5 if few avenues
+        if len(plans) == 5:
+            break
+        if all(p["rubric"] != cand["rubric"] for p in plans):
+            plans.append(plan(cand))
+    return validate_plans(plans)
 
 
 def pick3(plans: list) -> list:

@@ -116,7 +116,7 @@ def estimate_us(genome: KernelGenome, m: int, n: int, k: int) -> float:
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class EvalResult:
-    status: str                 # ok | compile_error | incorrect
+    status: str                 # ok | compile_error | runtime_error | incorrect
     error: str = ""
     timings_us: dict = dataclasses.field(default_factory=dict)
 
@@ -127,7 +127,8 @@ class EvaluationService:
                  correctness_config=(256, 256, 256),
                  noise: float = 0.0, seed: int = 0,
                  rtol: float = 0.06) -> None:
-        assert backend in ("cost_model", "wall_clock")
+        if backend not in ("cost_model", "wall_clock"):
+            raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
         self.bench_configs = tuple(bench_configs)
         self.correctness_config = correctness_config
@@ -150,6 +151,14 @@ class EvaluationService:
         finally:
             self._lock.release()
 
+    # ------------------------------------------------- resumable campaigns
+    def state_dict(self) -> dict:
+        """Deterministic-noise state to persist across a campaign restart."""
+        return {"submissions": self.submissions}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.submissions = d["submissions"]
+
     # ------------------------------------------------------------ internals
     def _evaluate(self, source: str) -> EvalResult:
         try:
@@ -159,7 +168,10 @@ class EvaluationService:
 
         ok, err = self._check_correctness(run)
         if err is not None:
-            return EvalResult("compile_error", err)
+            # the kernel compiled/loaded but blew up while executing — a
+            # distinct platform verdict so the selector/designer see accurate
+            # feedback (a tiling bug, not a syntax error)
+            return EvalResult("runtime_error", err)
         if not ok:
             return EvalResult("incorrect",
                               "output mismatch vs reference oracle "
@@ -187,7 +199,7 @@ class EvaluationService:
             try:
                 timings[config_key(cfg)] = self._time_wall(run, cfg)
             except Exception as e:
-                return EvalResult("compile_error",
+                return EvalResult("runtime_error",
                                   f"{type(e).__name__} on {cfg}: {e}")
         return EvalResult("ok", timings_us=timings)
 

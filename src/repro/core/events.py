@@ -1,0 +1,75 @@
+"""Structured JSONL event log for the Kernel Scientist campaign.
+
+Every observable of the discovery process — stage start/end with durations,
+retries and fallbacks, per-submission evaluation outcomes, generation
+summaries — is appended as one JSON object per line to ``events.jsonl`` in
+the campaign workdir (and kept in memory when no workdir is set).  The log is
+append-only so a resumed campaign extends the same file, and it is consumed
+by ``benchmarks/trajectory.py`` for the §4.4 discovery-process figure
+(best-so-far curve annotated with retry/fallback density and stage
+latencies).
+
+Events are *observational*: nothing in the loop reads them back, so wall
+timestamps here never affect resume determinism.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Optional
+
+
+class EventLog:
+    def __init__(self, path=None, clock=time.time) -> None:
+        self.path = pathlib.Path(path) if path else None
+        self.records: list[dict] = []
+        self._seq = 0
+        self._clock = clock
+        if self.path:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            if self.path.exists():  # resumed campaign: continue the sequence
+                try:
+                    prior = self.read(self.path)
+                    self._seq = prior[-1]["seq"] if prior else 0
+                except (json.JSONDecodeError, KeyError):
+                    self._seq = 0
+
+    def emit(self, event: str, **fields) -> dict:
+        self._seq += 1
+        rec = {"seq": self._seq, "ts": round(self._clock(), 3),
+               "event": event, **fields}
+        self.records.append(rec)
+        if self.path:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+        return rec
+
+    # ------------------------------------------------------------- queries
+    def counts(self, event: Optional[str] = None) -> dict:
+        """event name -> count (or {} filtered to one event)."""
+        out: dict[str, int] = {}
+        for r in self.records:
+            if event is None or r["event"] == event:
+                out[r["event"]] = out.get(r["event"], 0) + 1
+        return out
+
+    def select(self, event: str, **where) -> list[dict]:
+        return [r for r in self.records if r["event"] == event
+                and all(r.get(k) == v for k, v in where.items())]
+
+    def stage_durations(self) -> dict:
+        """stage name -> list of duration_s from stage_end events."""
+        out: dict[str, list] = {}
+        for r in self.select("stage_end"):
+            out.setdefault(r["stage"], []).append(r["duration_s"])
+        return out
+
+    @staticmethod
+    def read(path) -> list[dict]:
+        out = []
+        for line in pathlib.Path(path).read_text().splitlines():
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+        return out

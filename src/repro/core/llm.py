@@ -81,7 +81,8 @@ _CFG_RE = re.compile(r"m(\d+)_n(\d+)_k(\d+)")
 
 def _parse_cfg(key: str) -> tuple:
     m = _CFG_RE.fullmatch(key)
-    assert m, key
+    if not m:
+        raise ValueError(f"unparseable benchmark config key {key!r}")
     return tuple(int(g) for g in m.groups())
 
 
@@ -89,6 +90,15 @@ class ScriptedLLM(LLMClient):
     def __init__(self, seed: int = 0) -> None:
         self.seed = seed
         self._calls = 0
+
+    # ------------------------------------------------- resumable campaigns
+    def state_dict(self) -> dict:
+        """Jitter state to persist so a resumed campaign replays the same
+        decision sequence as an uninterrupted one."""
+        return {"calls": self._calls}
+
+    def load_state_dict(self, d: dict) -> None:
+        self._calls = d["calls"]
 
     def _jitter(self, *parts) -> float:
         """Deterministic pseudo-randomness in [-1, 1] — the sampling-
@@ -117,7 +127,8 @@ class ScriptedLLM(LLMClient):
     def _select(self, state: dict) -> dict:
         rows = state["population"]
         ok = [r for r in rows if r["status"] == "ok" and r["score_geomean_us"]]
-        assert ok, "selector called with no evaluated kernels"
+        if not ok:
+            raise ValueError("selector called with no evaluated kernels")
         # The Base must be editable kernel code: the provided library
         # implementation is a benchmark row, not a diffable submission
         # (paper §3: experiments modify the HIP kernel, never PyTorch).

@@ -55,7 +55,10 @@ class KernelRecord:
     genome: Optional[KernelGenome]            # None if source was hand/LLM-written
     experiment: dict                          # {description, rubric, performance, innovation}
     writer_report: str = ""                   # what the writer says it actually did
-    status: str = "pending"                   # pending | ok | compile_error | incorrect
+    # pending | ok | compile_error | runtime_error | incorrect | failed
+    # ("failed": the evaluation service itself errored after retries —
+    #  platform-level failure, not a verdict about the kernel)
+    status: str = "pending"
     error: str = ""                           # platform feedback on failure
     timings_us: dict = dataclasses.field(default_factory=dict)  # config_key -> µs
     generation: int = 0
@@ -94,10 +97,30 @@ class Population:
         return f"{self._counter:05d}"
 
     def add(self, rec: KernelRecord) -> KernelRecord:
-        assert rec.rid not in self._records, rec.rid
+        # real exceptions, not asserts: these invariants must hold under -O
+        if rec.rid in self._records:
+            raise ValueError(f"duplicate record id {rec.rid!r}")
         for p in rec.parents:
-            assert p in self._records, f"unknown parent {p}"
+            if p not in self._records:
+                raise ValueError(f"unknown parent {p!r} of {rec.rid!r}")
         self._records[rec.rid] = rec
+        return rec
+
+    def remove(self, rid: str) -> KernelRecord:
+        """Drop a record (and roll back the id counter if it was the newest).
+
+        Used by campaign resume to discard the in-flight kernel of a crashed
+        generation so its replay re-issues the same id.  Records with
+        children cannot be removed.
+        """
+        rec = self._records.get(rid)
+        if rec is None:
+            raise KeyError(rid)
+        children = [r.rid for r in self if rid in r.parents]
+        if children:
+            raise ValueError(f"{rid!r} has children {children}")
+        del self._records[rid]
+        self._counter = max((int(r.rid) for r in self), default=0)
         return rec
 
     # ------------------------------------------------------------ queries

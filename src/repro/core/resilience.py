@@ -1,0 +1,245 @@
+"""Campaign resilience: retry/backoff policies and seeded fault injection.
+
+The paper's loop ran autonomously for days against a *shared external
+evaluation queue* (§3.4): submissions were processed sequentially by a remote
+platform with variable queueing delays, transient API failures, and
+occasionally malformed LLM replies.  Surviving that environment — rather than
+aborting a multi-day campaign on the first hiccup — is part of the method.
+This module supplies the two halves needed to reproduce it offline:
+
+* ``RetryPolicy`` / ``retry_call`` — bounded retry with exponential backoff
+  and deterministic jitter, plus an optional per-attempt timeout.  Knob →
+  paper §3.4 mapping:
+
+  - ``max_attempts``  — how many times a stage re-asks the LLM or re-submits
+    to the evaluation queue before the scientist falls back to a rule-based
+    decision (the paper's loop "waited and retried" on platform errors).
+  - ``base_delay_s`` / ``multiplier`` / ``max_delay_s`` — exponential backoff
+    between attempts, modelling the "good citizen" pacing against the shared
+    sequential queue (§3.4: one submission in flight at a time).
+  - ``jitter`` — deterministic (seed + attempt hashed) spread of the backoff
+    so many campaigns do not thunder the queue in lockstep.
+  - ``timeout_s`` — per-attempt wall-clock bound, modelling the variable and
+    occasionally unbounded evaluation-queue delays; a timed-out attempt is
+    retried like any transient failure.  (Implemented with a worker thread;
+    an abandoned attempt may keep running in the background — acceptable for
+    network calls, so the default is ``None`` for in-process backends.)
+
+* ``FlakyLLM`` / ``FlakyService`` — seeded fault-injection decorators that
+  wrap an ``LLMClient`` / ``EvaluationService`` and deterministically inject
+  transient errors, timeouts, and malformed (non-JSON) replies *without*
+  consuming the wrapped backend's state.  They make every resilience path in
+  ``KernelScientist`` testable in this offline container; a given
+  ``(seed, call_index)`` pair always produces the same fault, so soak tests
+  are exactly reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Callable, Optional
+
+
+class TransientError(RuntimeError):
+    """A failure worth retrying: dropped connection, HTTP 5xx, queue hiccup."""
+
+
+#: Exception types that ``retry_call`` retries by default.  ``ValueError`` and
+#: ``KeyError`` cover malformed LLM replies (bad JSON, missing schema fields);
+#: ``TimeoutError`` covers per-attempt timeouts; ``ConnectionError`` / OSError
+#: cover the network failures an HTTP backend raises.
+DEFAULT_RETRYABLE = (TransientError, TimeoutError, ValueError, KeyError,
+                     ConnectionError, OSError)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    max_attempts: int = 4
+    base_delay_s: float = 0.5
+    multiplier: float = 2.0
+    max_delay_s: float = 30.0
+    jitter: float = 0.25          # +- fraction of the delay, deterministic
+    timeout_s: Optional[float] = None
+    retryable: tuple = DEFAULT_RETRYABLE
+    seed: int = 0
+
+    def delay(self, attempt: int) -> float:
+        """Backoff before retry number ``attempt`` (1-based), deterministic."""
+        d = min(self.base_delay_s * self.multiplier ** (attempt - 1),
+                self.max_delay_s)
+        if self.jitter:
+            d *= 1.0 + self.jitter * _unit(self.seed, "delay", attempt)
+        return max(d, 0.0)
+
+
+#: Sensible production default (~0.5s, 1s, 2s between 4 attempts).
+DEFAULT_POLICY = RetryPolicy()
+
+#: For tests and offline ScriptedLLM runs: same attempt budget, no waiting.
+NO_WAIT_POLICY = RetryPolicy(base_delay_s=0.0, jitter=0.0)
+
+
+def _unit(*parts) -> float:
+    """Deterministic pseudo-random float in [-1, 1] from the hashed parts."""
+    h = hashlib.sha256(":".join(str(p) for p in parts).encode()).digest()
+    return int.from_bytes(h[:8], "big") / 2 ** 63 - 1.0
+
+
+def _uniform01(*parts) -> float:
+    """Deterministic pseudo-random float in [0, 1) from the hashed parts."""
+    h = hashlib.sha256(":".join(str(p) for p in parts).encode()).digest()
+    return int.from_bytes(h[:8], "big") / 2 ** 64
+
+
+def _call_with_timeout(fn: Callable, timeout_s: Optional[float]):
+    if not timeout_s:
+        return fn()
+    import concurrent.futures
+    ex = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+    fut = ex.submit(fn)
+    try:
+        return fut.result(timeout=timeout_s)
+    except concurrent.futures.TimeoutError:
+        raise TimeoutError(f"attempt exceeded the {timeout_s}s stage timeout")
+    finally:
+        ex.shutdown(wait=False)
+
+
+def retry_call(fn: Callable, policy: RetryPolicy = DEFAULT_POLICY,
+               on_retry: Optional[Callable] = None,
+               sleep: Callable = time.sleep):
+    """Call ``fn()`` under ``policy``; return its result.
+
+    Retryable exceptions are swallowed up to ``policy.max_attempts`` total
+    attempts with exponential backoff between them; the last one is re-raised.
+    Non-retryable exceptions (and BaseExceptions such as KeyboardInterrupt)
+    propagate immediately.  ``on_retry(attempt, exc, delay_s)`` is invoked
+    before each backoff so callers can log retries.
+    """
+    if policy.max_attempts < 1:
+        raise ValueError("max_attempts must be >= 1")
+    for attempt in range(1, policy.max_attempts + 1):
+        try:
+            return _call_with_timeout(fn, policy.timeout_s)
+        except policy.retryable as e:
+            if attempt == policy.max_attempts:
+                raise
+            delay = policy.delay(attempt)
+            if on_retry is not None:
+                on_retry(attempt, e, delay)
+            if delay:
+                sleep(delay)
+
+
+# ---------------------------------------------------------------------------
+# Seeded fault injection
+# ---------------------------------------------------------------------------
+_MALFORMED_REPLY = ("I could not produce the requested JSON this time — "
+                    "here is a prose apology instead. (injected fault: "
+                    "malformed LLM reply)")
+
+
+class FlakyLLM:
+    """Wrap an ``LLMClient`` and deterministically inject transient faults.
+
+    Per call, one uniform draw keyed on ``(seed, call_index)`` selects the
+    fault: ``TransientError`` with probability ``error_rate``, ``TimeoutError``
+    with ``timeout_rate``, a malformed non-JSON reply with ``malformed_rate``,
+    otherwise the wrapped client answers.  Faults fire *before* the wrapped
+    client is consulted, so its internal call counter only advances on the
+    attempts that actually reach it.
+    """
+
+    def __init__(self, inner, seed: int = 0, error_rate: float = 0.1,
+                 timeout_rate: float = 0.0, malformed_rate: float = 0.0):
+        if error_rate + timeout_rate + malformed_rate > 1.0:
+            raise ValueError("fault rates must sum to <= 1")
+        self.inner = inner
+        self.seed = seed
+        self.error_rate = error_rate
+        self.timeout_rate = timeout_rate
+        self.malformed_rate = malformed_rate
+        self.calls = 0
+        self.faults = 0
+
+    def complete(self, prompt: str) -> str:
+        self.calls += 1
+        u = _uniform01(self.seed, "llm", self.calls)
+        if u < self.error_rate:
+            self.faults += 1
+            raise TransientError(
+                f"injected: LLM API returned HTTP 503 (call {self.calls})")
+        if u < self.error_rate + self.timeout_rate:
+            self.faults += 1
+            raise TimeoutError(
+                f"injected: LLM API stalled past the deadline "
+                f"(call {self.calls})")
+        if u < self.error_rate + self.timeout_rate + self.malformed_rate:
+            self.faults += 1
+            return _MALFORMED_REPLY
+        return self.inner.complete(prompt)
+
+    # resumable-campaign state (see KernelScientist.resume)
+    def state_dict(self) -> dict:
+        inner = getattr(self.inner, "state_dict", None)
+        return {"calls": self.calls, "faults": self.faults,
+                "inner": inner() if inner else None}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.calls = d["calls"]
+        self.faults = d.get("faults", 0)
+        if d.get("inner") is not None:
+            self.inner.load_state_dict(d["inner"])
+
+
+class FlakyService:
+    """Wrap an ``EvaluationService`` and inject transient submission failures.
+
+    Models the shared evaluation queue dropping or timing out a submission
+    (paper §3.4) before it reaches the platform: the wrapped service's
+    submission counter does not advance on an injected fault, exactly like a
+    request that never arrived.
+    """
+
+    def __init__(self, inner, seed: int = 0, error_rate: float = 0.1,
+                 timeout_rate: float = 0.0):
+        if error_rate + timeout_rate > 1.0:
+            raise ValueError("fault rates must sum to <= 1")
+        self.inner = inner
+        self.seed = seed
+        self.error_rate = error_rate
+        self.timeout_rate = timeout_rate
+        self.calls = 0
+        self.faults = 0
+
+    def submit(self, source: str):
+        self.calls += 1
+        u = _uniform01(self.seed, "svc", self.calls)
+        if u < self.error_rate:
+            self.faults += 1
+            raise TransientError(
+                f"injected: evaluation queue dropped the submission "
+                f"(call {self.calls})")
+        if u < self.error_rate + self.timeout_rate:
+            self.faults += 1
+            raise TimeoutError(
+                f"injected: evaluation queue exceeded its deadline "
+                f"(call {self.calls})")
+        return self.inner.submit(source)
+
+    def state_dict(self) -> dict:
+        inner = getattr(self.inner, "state_dict", None)
+        return {"calls": self.calls, "faults": self.faults,
+                "inner": inner() if inner else None}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.calls = d["calls"]
+        self.faults = d.get("faults", 0)
+        if d.get("inner") is not None:
+            self.inner.load_state_dict(d["inner"])
+
+    def __getattr__(self, name):
+        # delegate everything else (submissions, bench_configs, ...) so the
+        # wrapper is a drop-in EvaluationService
+        return getattr(self.inner, name)

@@ -7,19 +7,46 @@ Everything the paper's loop records is recorded here: population with
 lineage, per-config benchmark timings, experiment descriptions/rubrics,
 selection rationales, writer reports, and a generation-by-generation logbook
 (used by benchmarks/trajectory.py for the §4.4 discovery-process figure).
+
+The loop is built for the paper's operating regime — autonomous multi-day
+campaigns against a flaky shared evaluation queue (§3.4):
+
+* **Per-submission persistence.**  ``population.json`` + ``state.json`` are
+  rewritten atomically after every individual submission (not just every
+  generation), so a crash loses at most the one in-flight kernel.
+* **Resume.**  ``KernelScientist.resume(workdir, ...)`` reconstructs the
+  population, logbook, and any partially-completed generation from the
+  persisted state and continues the campaign.  Backend decision state
+  (ScriptedLLM jitter counter, EvaluationService noise counter) is restored
+  too, so a killed-and-resumed campaign produces a trajectory identical to
+  an uninterrupted same-seed run.
+* **Retry + fallback.**  Every LLM stage and every evaluation submission is
+  retried with exponential backoff (``core.resilience``); a stage that stays
+  broken falls back to a deterministic rule-based decision instead of
+  aborting the generation.
+* **Event log.**  Stage timings, retries, fallbacks, and evaluation outcomes
+  stream to ``events.jsonl`` (``core.events``) for the §4.4 figure.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import pathlib
+import time
 from typing import Optional
 
-from . import codegen, designer, prompts, selector, writer
+from . import codegen, designer, prompts, resilience, selector, writer
+from .events import EventLog
 from .evaluator import EvaluationService, EvalResult
 from .genome import SEED_LIBRARY, SEED_MXU, SEED_NAIVE, KernelGenome
 from .llm import LLMClient, ScriptedLLM
 from .population import KernelRecord, Population
+
+_STATE_SCHEMA = 1
+
+
+def _errtext(e: BaseException) -> str:
+    return f"{type(e).__name__}: {e}"
 
 
 @dataclasses.dataclass
@@ -28,24 +55,107 @@ class GenerationLog:
     selection: dict
     plans: list
     picked: list
-    submitted: list            # [(rid, status, geomean_us)]
-    best_rid: str
-    best_geomean_us: float
+    submitted: list            # [(rid, status, geomean_us-or-None)]
+    best_rid: str              # "" while the population has no ok member
+    best_geomean_us: float     # inf while the population has no ok member
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        # JSON has no Infinity; json.dumps would emit the non-standard token
+        if d["best_geomean_us"] == float("inf"):
+            d["best_geomean_us"] = None
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "GenerationLog":
+        d = dict(d)
+        if d.get("best_geomean_us") is None:
+            d["best_geomean_us"] = float("inf")
+        d["submitted"] = [tuple(s) for s in d.get("submitted", [])]
+        return GenerationLog(**d)
 
 
 class KernelScientist:
     def __init__(self, llm: Optional[LLMClient] = None,
                  service: Optional[EvaluationService] = None,
                  task_text: str = prompts.TASK_TEXT,
-                 workdir: Optional[str] = None) -> None:
+                 workdir: Optional[str] = None,
+                 retry_policy: Optional[resilience.RetryPolicy] = None,
+                 events: Optional[EventLog] = None,
+                 sleep=time.sleep) -> None:
         self.llm = llm or ScriptedLLM()
         self.service = service or EvaluationService()
         self.task_text = task_text
         self.population = Population()
         self.logbook: list[GenerationLog] = []
+        self.retry_policy = retry_policy or resilience.DEFAULT_POLICY
+        self._sleep = sleep
+        self._seeded = False
+        self._inflight: Optional[dict] = None   # partially-run generation
         self.workdir = pathlib.Path(workdir) if workdir else None
         if self.workdir:
             self.workdir.mkdir(parents=True, exist_ok=True)
+        self.events = events or EventLog(
+            self.workdir / "events.jsonl" if self.workdir else None)
+
+    # ------------------------------------------------------------- resume
+    @classmethod
+    def resume(cls, workdir, llm: Optional[LLMClient] = None,
+               service: Optional[EvaluationService] = None,
+               **kwargs) -> "KernelScientist":
+        """Reconstruct a campaign from its workdir and continue it.
+
+        Pass ``llm`` / ``service`` instances constructed exactly as in the
+        original run (same seeds and noise); their internal decision state is
+        fast-forwarded from ``state.json`` so the continued campaign makes
+        the same choices an uninterrupted run would have made.  If the last
+        persisted state holds a partially-completed generation, the next
+        :meth:`run` finishes it first — only the kernel that was in flight
+        at the moment of the crash is re-generated and re-submitted.
+        """
+        workdir = pathlib.Path(workdir)
+        state_path = workdir / "state.json"
+        if not state_path.exists():
+            raise FileNotFoundError(
+                f"no resumable campaign in {workdir} (state.json missing)")
+        state = json.loads(state_path.read_text())
+        sci = cls(llm=llm, service=service, workdir=workdir, **kwargs)
+        if not state.get("seeded"):
+            # crashed mid-seed: cheapest correct recovery is a fresh start
+            sci.events.emit("resume", mode="restart_unseeded")
+            return sci
+        sci.population = Population.load(workdir / "population.json")
+        logbook_path = workdir / "logbook.json"
+        if logbook_path.exists():
+            sci.logbook = [GenerationLog.from_dict(d)
+                           for d in json.loads(logbook_path.read_text())]
+        sci._seeded = True
+        sci._restore_backend(sci.llm, state.get("llm"))
+        sci._restore_backend(sci.service, state.get("service"))
+        inflight = state.get("inflight")
+        if inflight:
+            # drop records of the interrupted generation that were added but
+            # whose evaluation never persisted — their ids are re-issued when
+            # the generation replays its remaining submissions
+            done = {s[0] for s in inflight["submitted"]}
+            ghosts = [r.rid for r in sci.population
+                      if r.generation == inflight["generation"]
+                      and r.rid not in done]
+            for rid in ghosts:
+                sci.population.remove(rid)
+            sci._inflight = inflight
+        sci.events.emit(
+            "resume", mode="continue", generations_done=len(sci.logbook),
+            population=len(sci.population),
+            inflight_generation=(inflight["generation"] if inflight else None),
+            inflight_submitted=(len(inflight["submitted"]) if inflight
+                                else None))
+        return sci
+
+    @staticmethod
+    def _restore_backend(obj, state) -> None:
+        if state is not None and hasattr(obj, "load_state_dict"):
+            obj.load_state_dict(state)
 
     # ------------------------------------------------------------ seeding
     def seed(self, genomes=(SEED_LIBRARY, SEED_NAIVE, SEED_MXU),
@@ -55,7 +165,9 @@ class KernelScientist:
                            "first working MXU kernel (128^3 VMEM tiles)"),
              ) -> None:
         """Paper §3: the process starts from a few seed kernels."""
-        assert len(self.population) == 0, "already seeded"
+        if len(self.population) != 0:
+            raise RuntimeError("already seeded")
+        self.events.emit("campaign_start", seeds=len(genomes))
         for genome, desc in zip(genomes, descriptions):
             source = codegen.render_source(genome, desc)
             rec = KernelRecord(
@@ -64,80 +176,210 @@ class KernelScientist:
                 experiment={"description": desc, "rubric": "(seed)",
                             "performance": [0, 0], "innovation": 0},
                 writer_report="(seed kernel)", generation=0)
-            self.population._records[rec.rid] = rec
-            self._apply_eval(rec, self.service.submit(source))
+            self.population.add(rec)
+            self._evaluate_record(rec, source)
+            self._persist()
+        self._seeded = True
         self._persist()
+        self.events.emit("seeded", population=len(self.population))
 
     # --------------------------------------------------------------- loop
     def run_generation(self, generation: int) -> GenerationLog:
-        sel = selector.select(self.population, self.llm, self.task_text)
-        plans = designer.design(self.population, sel.basis_code,
-                                sel.basis_reference, self.llm, self.task_text)
+        self.events.emit("generation_start", generation=generation)
+        sel = self._stage(
+            "selector", generation,
+            lambda: selector.select(self.population, self.llm,
+                                    self.task_text),
+            fallback=lambda: selector.fallback_select(self.population))
+        plans = self._stage(
+            "designer", generation,
+            lambda: designer.design(self.population, sel.basis_code,
+                                    sel.basis_reference, self.llm,
+                                    self.task_text),
+            fallback=lambda: designer.fallback_design(self.population,
+                                                      sel.basis_code))
         picked = designer.pick3(plans)
+        inflight = {"generation": generation,
+                    "selection": dataclasses.asdict(sel),
+                    "plans": plans, "picked": picked, "submitted": []}
+        self._persist(inflight)
+        return self._finish_generation(inflight)
 
-        submitted = []
-        for exp in picked:  # three independent writer instances (paper §3.2)
-            wk = writer.write(self.population, sel.basis_code,
-                              sel.basis_reference, exp, self.llm,
-                              self.task_text)
-            rec = KernelRecord(
-                rid=self.population.new_id(),
-                parents=(sel.basis_code, sel.basis_reference),
-                source=wk.source,
-                genome=(KernelGenome.from_json(wk.genome_json)
-                        if wk.genome_json else None),
-                experiment={k: exp[k] for k in
-                            ("description", "rubric", "performance",
-                             "innovation")},
-                writer_report=wk.report, generation=generation)
-            self.population.add(rec)
-            # sequential submission — the platform enforces it too
-            self._apply_eval(rec, self.service.submit(wk.source))
+    def _finish_generation(self, inflight: dict) -> GenerationLog:
+        """Run (or, after a resume, complete) the submission half of a
+        generation from its persisted in-flight checkpoint."""
+        generation = inflight["generation"]
+        sel = selector.Selection(**inflight["selection"])
+        picked = inflight["picked"]
+        submitted = [tuple(s) for s in inflight["submitted"]]
+
+        for exp in picked[len(submitted):]:
+            # three independent writer instances (paper §3.2); the service
+            # still serialises their submissions
+            rec = self._submit_experiment(generation, sel, exp)
             submitted.append((rec.rid, rec.status,
-                              rec.score if rec.score != float("inf") else None))
+                              rec.score if rec.score != float("inf")
+                              else None))
+            inflight["submitted"] = [list(s) for s in submitted]
+            self._persist(inflight)
 
         best = self.population.best()
         log = GenerationLog(
             generation=generation,
-            selection=dataclasses.asdict(sel),
+            selection=inflight["selection"],
             plans=[{k: p[k] for k in ("description", "performance",
-                                      "innovation")} for p in plans],
+                                      "innovation")}
+                   for p in inflight["plans"]],
             picked=[p["description"] for p in picked],
             submitted=submitted,
-            best_rid=best.rid, best_geomean_us=best.score)
+            best_rid=best.rid if best else "",
+            best_geomean_us=best.score if best else float("inf"))
         self.logbook.append(log)
-        self._persist()
+        self._persist()   # clears the in-flight checkpoint
+        self.events.emit(
+            "generation_end", generation=generation, best_rid=log.best_rid,
+            best_geomean_us=(None if log.best_geomean_us == float("inf")
+                             else round(log.best_geomean_us, 3)))
         return log
 
-    def run(self, generations: int) -> KernelRecord:
-        if len(self.population) == 0:
+    def _submit_experiment(self, generation: int, sel, exp: dict
+                           ) -> KernelRecord:
+        wk = self._stage(
+            "writer", generation,
+            lambda: writer.write(self.population, sel.basis_code,
+                                 sel.basis_reference, exp, self.llm,
+                                 self.task_text),
+            fallback=lambda: writer.fallback_write(self.population,
+                                                   sel.basis_code, exp))
+        rec = KernelRecord(
+            rid=self.population.new_id(),
+            parents=(sel.basis_code, sel.basis_reference),
+            source=wk.source,
+            genome=(KernelGenome.from_json(wk.genome_json)
+                    if wk.genome_json else None),
+            experiment={k: exp.get(k) for k in
+                        ("description", "rubric", "performance",
+                         "innovation")},
+            writer_report=wk.report, generation=generation)
+        self.population.add(rec)
+        self._evaluate_record(rec, wk.source)
+        return rec
+
+    def run(self, generations: int) -> Optional[KernelRecord]:
+        remaining = generations
+        if len(self.population) == 0 and self._inflight is None:
             self.seed()
+        if self._inflight is not None and remaining > 0:
+            inflight, self._inflight = self._inflight, None
+            self._finish_generation(inflight)
+            remaining -= 1
         start = len(self.logbook) + 1
-        for g in range(start, start + generations):
+        for g in range(start, start + remaining):
             self.run_generation(g)
         return self.population.best()
 
     # ------------------------------------------------------------ helpers
+    def _stage(self, stage: str, generation: int, fn, fallback=None):
+        """Run one LLM stage under the retry policy; fall back to the
+        deterministic rule-based decision if it stays broken."""
+        self.events.emit("stage_start", stage=stage, generation=generation)
+        t0 = time.perf_counter()
+
+        def on_retry(attempt, exc, delay):
+            self.events.emit("retry", stage=stage, generation=generation,
+                             attempt=attempt, error=_errtext(exc),
+                             delay_s=round(delay, 3))
+
+        status = "ok"
+        try:
+            out = resilience.retry_call(fn, policy=self.retry_policy,
+                                        on_retry=on_retry, sleep=self._sleep)
+        except Exception as e:
+            if fallback is None:
+                self.events.emit("stage_end", stage=stage,
+                                 generation=generation, status="error",
+                                 error=_errtext(e), duration_s=round(
+                                     time.perf_counter() - t0, 6))
+                raise
+            self.events.emit("fallback", stage=stage, generation=generation,
+                             error=_errtext(e))
+            out = fallback()
+            status = "fallback"
+        self.events.emit("stage_end", stage=stage, generation=generation,
+                         status=status,
+                         duration_s=round(time.perf_counter() - t0, 6))
+        return out
+
+    def _evaluate_record(self, rec: KernelRecord, source: str) -> None:
+        """Submit under the retry policy; a submission the platform never
+        accepts is marked ``failed`` (with the error text) rather than left
+        ``pending``, so a resumed campaign carries no ghost members."""
+        def on_retry(attempt, exc, delay):
+            self.events.emit("retry", stage="evaluate", rid=rec.rid,
+                             attempt=attempt, error=_errtext(exc),
+                             delay_s=round(delay, 3))
+
+        t0 = time.perf_counter()
+        try:
+            res = resilience.retry_call(
+                lambda: self.service.submit(source),
+                policy=self.retry_policy, on_retry=on_retry,
+                sleep=self._sleep)
+        except Exception as e:
+            rec.status = "failed"
+            rec.error = _errtext(e)
+            self.events.emit("eval_result", rid=rec.rid, status="failed",
+                             error=rec.error,
+                             duration_s=round(time.perf_counter() - t0, 6))
+            return
+        self._apply_eval(rec, res)
+        self.events.emit(
+            "eval_result", rid=rec.rid, status=rec.status,
+            geomean_us=(None if rec.score == float("inf")
+                        else round(rec.score, 3)),
+            duration_s=round(time.perf_counter() - t0, 6))
+
     def _apply_eval(self, rec: KernelRecord, res: EvalResult) -> None:
         rec.status = res.status
         rec.error = res.error
         rec.timings_us = dict(res.timings_us)
 
-    def _persist(self) -> None:
+    def _backend_state(self, obj) -> Optional[dict]:
+        sd = getattr(obj, "state_dict", None)
+        return sd() if sd else None
+
+    def _persist(self, inflight: Optional[dict] = None) -> None:
         if not self.workdir:
             return
+        # population first, state.json last: state.json only ever references
+        # records that are already durable, so any crash window resolves to
+        # "replay the in-flight kernel"
         self.population.save(self.workdir / "population.json")
-        (self.workdir / "logbook.json").write_text(json.dumps(
-            [dataclasses.asdict(l) for l in self.logbook], indent=1))
+        tmp = self.workdir / "logbook.json.tmp"
+        tmp.write_text(json.dumps([l.to_dict() for l in self.logbook],
+                                  indent=1))
+        tmp.replace(self.workdir / "logbook.json")
+        state = {"schema": _STATE_SCHEMA,
+                 "seeded": self._seeded,
+                 "llm": self._backend_state(self.llm),
+                 "service": self._backend_state(self.service),
+                 "inflight": inflight}
+        tmp = self.workdir / "state.json.tmp"
+        tmp.write_text(json.dumps(state, indent=1))
+        tmp.replace(self.workdir / "state.json")
 
     # ------------------------------------------------------------- report
     def trajectory(self) -> list:
-        """(generation, best_geomean_us) pairs — the discovery curve."""
+        """(generation, best_geomean_us) pairs — the discovery curve.
+
+        ``None`` (not the non-JSON token ``Infinity``) stands in for "no
+        successful kernel yet"."""
         out = []
         best = min((r.score for r in self.population if r.generation == 0),
                    default=float("inf"))
-        out.append((0, best))
+        out.append((0, best if best != float("inf") else None))
         for log in self.logbook:
             best = min(best, log.best_geomean_us)
-            out.append((log.generation, best))
+            out.append((log.generation,
+                        best if best != float("inf") else None))
         return out

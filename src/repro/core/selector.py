@@ -40,3 +40,28 @@ def select(population: Population, llm: LLMClient,
         parents = population.get(basis).parents
         reference = parents[0] if parents else basis
     return Selection(basis, reference, str(reply.get("rationale", "")))
+
+
+def fallback_select(population: Population) -> Selection:
+    """Deterministic rule-based selection when the LLM selector stays
+    unusable after retries: best-scoring editable kernel as the Base, its
+    direct parent (else the best other member) as the Reference.  Mirrors
+    the paper's A.1 rule (ii) so a degraded generation still advances the
+    campaign instead of aborting it."""
+    ok = population.ok_records()
+    if not ok:
+        raise RuntimeError(
+            "cannot select: no successfully evaluated kernels in the "
+            "population (every submission so far failed)")
+    editable = [r for r in ok
+                if not (r.genome and r.genome.style == "library")]
+    basis = min(editable or ok, key=lambda r: (r.score, r.rid))
+    others = sorted(r.rid for r in ok if r.rid != basis.rid)
+    reference = (basis.parents[0] if basis.parents
+                 else (others[0] if others else basis.rid))
+    return Selection(
+        basis.rid, reference,
+        f"(rule-based fallback after LLM failures) Run {basis.rid} has the "
+        f"lowest geometric-mean benchmark score among editable kernels; run "
+        f"{reference} is its direct parent or the next-best evaluated "
+        f"member, giving the designer the closest useful comparison point.")

@@ -52,3 +52,40 @@ def write(population: Population, basis_id: str, reference_id: str,
         genome["dimension_semantics"] = tuple(genome["dimension_semantics"])
         genome_json = KernelGenome(**genome).to_json()
     return WrittenKernel(source, genome_json, str(reply.get("report", "")))
+
+
+def fallback_write(population: Population, basis_id: str,
+                   experiment: dict) -> WrittenKernel:
+    """Deterministic rule-based writer when the LLM stays unusable after
+    retries: apply the experiment's machine-readable ``genome_edit`` to the
+    Base genome directly (reverting to the Base if the edit is illegal) and
+    render the kernel from the template.  A degraded submission beats an
+    aborted generation — the evaluation platform remains the judge."""
+    from . import codegen
+    from .genome import KernelGenome
+
+    base = population.get(basis_id)
+    base_genome = base.genome or KernelGenome()
+    genome = base_genome
+    note = "resubmitting the base genome unchanged"
+    edit = experiment.get("genome_edit")
+    if edit:
+        clean = dict(edit)
+        if "dimension_semantics" in clean:
+            clean["dimension_semantics"] = tuple(clean["dimension_semantics"])
+        try:
+            cand = base_genome.replace(**clean)
+            if not cand.validate():
+                genome = cand
+                note = "applied the rubric's genome_edit mechanically"
+            else:
+                note = ("genome_edit produced an illegal configuration; "
+                        "reverted to the base genome")
+        except (TypeError, ValueError):
+            note = ("genome_edit did not parse against the design space; "
+                    "reverted to the base genome")
+    source = codegen.render_source(
+        genome, experiment.get("description", "(fallback submission)"))
+    return WrittenKernel(
+        source, genome.to_json(),
+        f"(rule-based fallback after LLM failures) {note}.")

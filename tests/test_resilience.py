@@ -1,0 +1,407 @@
+"""Campaign resilience: retry/backoff, seeded fault injection, per-submission
+persistence, kill-and-resume equivalence, and the structured event log.
+
+The two acceptance scenarios of the resilience layer:
+  * kill-and-resume — a campaign interrupted (at a generation boundary or
+    mid-generation) and resumed from its workdir produces a trajectory
+    bitwise-identical to an uninterrupted same-seed run;
+  * fault-injection soak — a 10-generation campaign completes with zero
+    aborted generations under >= 20% injected transient-failure rate.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.core import designer, resilience, selector, writer
+from repro.core.evaluator import EvaluationService
+from repro.core.events import EventLog
+from repro.core.llm import ScriptedLLM
+from repro.core.population import KernelRecord, Population
+from repro.core.resilience import (
+    NO_WAIT_POLICY, FlakyLLM, FlakyService, RetryPolicy, TransientError,
+    retry_call,
+)
+from repro.core.scientist import GenerationLog, KernelScientist
+
+
+# ---------------------------------------------------------------------------
+# retry_call / RetryPolicy
+# ---------------------------------------------------------------------------
+def test_retry_succeeds_after_transient_failures():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TransientError("flaky")
+        return "ok"
+
+    slept = []
+    out = retry_call(fn, policy=RetryPolicy(base_delay_s=0.01, jitter=0.0),
+                     sleep=slept.append)
+    assert out == "ok" and len(calls) == 3
+    assert slept == [0.01, 0.02]           # exponential backoff
+
+
+def test_retry_gives_up_after_max_attempts():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise TransientError("always down")
+
+    with pytest.raises(TransientError):
+        retry_call(fn, policy=RetryPolicy(max_attempts=3, base_delay_s=0.0),
+                   sleep=lambda s: None)
+    assert len(calls) == 3
+
+
+def test_retry_does_not_catch_nonretryable():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise ZeroDivisionError("bug, not flake")
+
+    with pytest.raises(ZeroDivisionError):
+        retry_call(fn, policy=NO_WAIT_POLICY, sleep=lambda s: None)
+    assert len(calls) == 1                 # no retry on a real bug
+
+
+def test_backoff_is_deterministic_and_capped():
+    p = RetryPolicy(base_delay_s=1.0, multiplier=3.0, max_delay_s=5.0,
+                    jitter=0.25, seed=9)
+    delays = [p.delay(a) for a in range(1, 6)]
+    assert delays == [p.delay(a) for a in range(1, 6)]
+    assert all(d <= 5.0 * 1.25 for d in delays)
+    assert all(d >= 0.0 for d in delays)
+
+
+# ---------------------------------------------------------------------------
+# Fault injectors
+# ---------------------------------------------------------------------------
+class _EchoLLM:
+    def __init__(self):
+        self.calls = 0
+
+    def complete(self, prompt):
+        self.calls += 1
+        return "{}"
+
+
+def test_flaky_llm_is_seeded_and_spares_inner_state():
+    def pattern_of(flaky):
+        out = []
+        for _ in range(20):
+            try:
+                flaky.complete("anything")
+                out.append("pass")
+            except (TransientError, TimeoutError):
+                out.append("fault")
+        return out
+
+    inner = _EchoLLM()
+    pattern = pattern_of(FlakyLLM(inner, seed=3, error_rate=0.3,
+                                  timeout_rate=0.2))
+    assert "fault" in pattern and "pass" in pattern
+    assert pattern == pattern_of(
+        FlakyLLM(_EchoLLM(), seed=3, error_rate=0.3, timeout_rate=0.2))
+    # injected faults never consumed the wrapped model's call budget
+    assert inner.calls == pattern.count("pass")
+
+
+def test_flaky_service_delegates_and_injects():
+    inner = EvaluationService()
+    flaky = FlakyService(inner, seed=1, error_rate=1.0)
+    with pytest.raises(TransientError):
+        flaky.submit("x = 1")
+    assert inner.submissions == 0          # the request "never arrived"
+    assert flaky.bench_configs == inner.bench_configs  # drop-in delegation
+
+
+def test_malformed_reply_is_a_retryable_stage_error():
+    flaky = FlakyLLM(ScriptedLLM(), seed=0, error_rate=0.0,
+                     malformed_rate=1.0)
+    from repro.core import prompts
+    with pytest.raises(ValueError):
+        prompts.extract_reply_json(flaky.complete("anything"))
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions (real exceptions, not asserts: these must still
+# raise under `python -O`, which strips assert statements)
+# ---------------------------------------------------------------------------
+def _rec(rid, parents=()):
+    return KernelRecord(rid=rid, parents=tuple(parents), source="",
+                        genome=None, experiment={})
+
+
+def test_population_add_invariants_raise_under_O():
+    pop = Population()
+    pop.add(_rec(pop.new_id()))
+    with pytest.raises(ValueError, match="duplicate"):
+        pop.add(_rec("00001"))
+    with pytest.raises(ValueError, match="unknown parent"):
+        pop.add(_rec(pop.new_id(), parents=("99999",)))
+
+
+def test_designer_validation_raises_under_O():
+    with pytest.raises(ValueError, match="no experiment plans"):
+        designer.validate_plans([])
+    with pytest.raises(ValueError, match="inverted"):
+        designer.validate_plans([{"description": "d", "rubric": "r",
+                                  "performance": [10, 5], "innovation": 1}])
+    with pytest.raises(ValueError, match="innovation"):
+        designer.validate_plans([{"description": "d", "rubric": "r",
+                                  "performance": [0, 5], "innovation": 400}])
+    with pytest.raises(ValueError, match="missing"):
+        designer.validate_plans([{"description": "d"}])
+
+
+def test_seed_goes_through_population_add():
+    sci = KernelScientist(llm=ScriptedLLM(), service=EvaluationService())
+    sci.seed()
+    # seeds now respect Population.add invariants: re-adding any seed rid is
+    # rejected, and the id counter is consistent with the stored records
+    with pytest.raises(ValueError, match="duplicate"):
+        sci.population.add(_rec("00001"))
+    assert sci.population.new_id() == "00004"
+    with pytest.raises(RuntimeError, match="already seeded"):
+        sci.seed()
+
+
+def test_runtime_error_status_distinct_from_compile_error():
+    svc = EvaluationService()
+    crashy = ('GENOME = None\n'
+              'def run(a, b, a_scale, b_scale, interpret=True):\n'
+              '    raise RuntimeError("tile index out of bounds")\n')
+    res = svc.submit(crashy)
+    assert res.status == "runtime_error"
+    assert "tile index out of bounds" in res.error
+    # compile failures are still compile_error
+    assert svc.submit("this is not python !!").status == "compile_error"
+
+
+def test_submit_failure_marks_record_failed_not_pending(tmp_path):
+    class BrokenService:
+        submissions = 0
+
+        def submit(self, source):
+            raise TransientError("queue on fire")
+
+    sci = KernelScientist(llm=ScriptedLLM(), service=BrokenService(),
+                          workdir=tmp_path, retry_policy=NO_WAIT_POLICY)
+    sci.seed()
+    assert [r.status for r in sci.population] == ["failed"] * 3
+    assert all("queue on fire" in r.error for r in sci.population)
+    # the failure is persisted: a resumed campaign sees no ghost "pending"
+    reloaded = Population.load(tmp_path / "population.json")
+    assert [r.status for r in reloaded] == ["failed"] * 3
+
+
+def test_no_infinity_token_in_serialized_output(tmp_path):
+    log = GenerationLog(generation=1, selection={}, plans=[], picked=[],
+                        submitted=[], best_rid="",
+                        best_geomean_us=float("inf"))
+    text = json.dumps(log.to_dict())
+    assert "Infinity" not in text
+    assert GenerationLog.from_dict(
+        json.loads(text)).best_geomean_us == float("inf")
+
+    class BrokenService:
+        submissions = 0
+
+        def submit(self, source):
+            raise TransientError("down")
+
+    sci = KernelScientist(llm=ScriptedLLM(), service=BrokenService(),
+                          workdir=tmp_path, retry_policy=NO_WAIT_POLICY)
+    sci.seed()
+    assert sci.trajectory() == [(0, None)]      # not Infinity
+    assert "Infinity" not in json.dumps(sci.trajectory())
+
+
+def test_best_none_does_not_crash_generation(tmp_path):
+    """Every submission of a generation failing must yield a logbook entry
+    (best_rid empty), not an AttributeError."""
+    sci = KernelScientist(llm=ScriptedLLM(), service=EvaluationService(),
+                          workdir=tmp_path, retry_policy=NO_WAIT_POLICY)
+    sci.seed()
+
+    class BrokenService:
+        submissions = 0
+
+        def submit(self, source):
+            raise TransientError("queue died after seeding")
+
+    # seeds are ok, so selection works; all 3 submissions then fail
+    sci.service = BrokenService()
+    log = sci.run_generation(1)
+    assert [s[1] for s in log.submitted] == ["failed"] * 3
+    assert log.best_rid != ""                   # seeds still hold the best
+    text = (tmp_path / "logbook.json").read_text()
+    assert "Infinity" not in text
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-resume equivalence
+# ---------------------------------------------------------------------------
+def _fresh(seed=5, **kw):
+    return dict(llm=ScriptedLLM(seed=seed),
+                service=EvaluationService(seed=seed, noise=0.02),
+                retry_policy=NO_WAIT_POLICY, **kw)
+
+
+def _snapshot(sci):
+    return {
+        "trajectory": sci.trajectory(),
+        "logbook": [l.to_dict() for l in sci.logbook],
+        "population": [(r.rid, r.parents, r.status, r.timings_us)
+                       for r in sci.population],
+    }
+
+
+def test_kill_and_resume_at_generation_boundary(tmp_path):
+    ref = KernelScientist(**_fresh())
+    ref.run(6)
+
+    sci = KernelScientist(**_fresh(), workdir=tmp_path / "wd")
+    sci.run(3)
+    del sci                                   # "kill" the process
+
+    resumed = KernelScientist.resume(tmp_path / "wd", **_fresh())
+    resumed.run(3)
+    assert _snapshot(resumed) == _snapshot(ref)
+
+
+class _CrashingService:
+    """Raises KeyboardInterrupt (uncatchable by the retry layer, like a real
+    SIGINT/OOM kill) on the n-th submission."""
+
+    def __init__(self, inner, crash_at):
+        self.inner = inner
+        self.crash_at = crash_at
+        self.calls = 0
+
+    def submit(self, source):
+        self.calls += 1
+        if self.calls == self.crash_at:
+            raise KeyboardInterrupt
+        return self.inner.submit(source)
+
+    def __getattr__(self, name):              # incl. state_dict passthrough
+        return getattr(self.inner, name)
+
+
+def test_kill_and_resume_mid_generation(tmp_path):
+    ref = KernelScientist(**_fresh())
+    ref.run(4)
+
+    kw = _fresh()
+    # 3 seeds + 3x gen1 + 3x gen2 + 2 of gen3 accepted; crash on the 12th
+    # submission — mid-generation-3, one kernel in flight
+    kw["service"] = _CrashingService(kw["service"], crash_at=12)
+    sci = KernelScientist(**kw, workdir=tmp_path / "wd")
+    with pytest.raises(KeyboardInterrupt):
+        sci.run(4)
+    assert len(sci.logbook) == 2              # gens 1-2 durable, gen 3 cut
+
+    resumed = KernelScientist.resume(tmp_path / "wd", **_fresh())
+    assert resumed._inflight is not None
+    assert len(resumed._inflight["submitted"]) == 2
+    resumed.run(2)                            # finish gen 3, then gen 4
+    assert _snapshot(resumed) == _snapshot(ref)
+
+
+def test_resume_restarts_cleanly_when_killed_mid_seed(tmp_path):
+    kw = _fresh()
+    kw["service"] = _CrashingService(kw["service"], crash_at=2)
+    sci = KernelScientist(**kw, workdir=tmp_path / "wd")
+    with pytest.raises(KeyboardInterrupt):
+        sci.run(2)
+
+    ref = KernelScientist(**_fresh())
+    ref.run(2)
+    resumed = KernelScientist.resume(tmp_path / "wd", **_fresh())
+    resumed.run(2)
+    assert _snapshot(resumed) == _snapshot(ref)
+
+
+def test_resume_requires_a_campaign(tmp_path):
+    with pytest.raises(FileNotFoundError, match="state.json"):
+        KernelScientist.resume(tmp_path / "nothing-here")
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection soak
+# ---------------------------------------------------------------------------
+def test_soak_20pct_faults_completes_10_generations():
+    llm = FlakyLLM(ScriptedLLM(seed=11), seed=13,
+                   error_rate=0.10, timeout_rate=0.04, malformed_rate=0.06)
+    service = FlakyService(EvaluationService(seed=11), seed=17,
+                           error_rate=0.20)
+    sci = KernelScientist(llm=llm, service=service,
+                          retry_policy=NO_WAIT_POLICY)
+    best = sci.run(10)
+
+    assert len(sci.logbook) == 10             # zero aborted generations
+    assert all(len(log.submitted) == 3 for log in sci.logbook)
+    assert len(sci.population) == 3 + 30
+    assert best is not None and best.score < float("inf")
+    # the campaign really was under fire, and the log shows the recovery work
+    assert llm.faults > 0 and service.faults > 0
+    counts = sci.events.counts()
+    assert counts.get("retry", 0) > 0
+    traj = [v for _, v in sci.trajectory() if v is not None]
+    assert traj == sorted(traj, reverse=True)  # still monotone best-so-far
+
+
+# ---------------------------------------------------------------------------
+# Structured event log
+# ---------------------------------------------------------------------------
+def test_event_log_jsonl_roundtrip_and_ordering(tmp_path):
+    sci = KernelScientist(llm=ScriptedLLM(), service=EvaluationService(),
+                          workdir=tmp_path, retry_policy=NO_WAIT_POLICY)
+    sci.run(2)
+    events = EventLog.read(tmp_path / "events.jsonl")
+    assert [e["seq"] for e in events] == list(range(1, len(events) + 1))
+    names = [e["event"] for e in events]
+    assert names[0] == "campaign_start"
+    assert names.count("generation_start") == 2
+    assert names.count("generation_end") == 2
+    assert names.count("eval_result") == 3 + 6   # seeds + 2 gens x 3
+    for e in events:
+        if e["event"] == "stage_end":
+            assert e["stage"] in ("selector", "designer", "writer")
+            assert e["duration_s"] >= 0.0
+    durs = sci.events.stage_durations()
+    assert set(durs) == {"selector", "designer", "writer"}
+    assert len(durs["writer"]) == 6
+
+
+def test_event_log_continues_sequence_across_resume(tmp_path):
+    sci = KernelScientist(**_fresh(), workdir=tmp_path / "wd")
+    sci.run(1)
+    n = len(EventLog.read(tmp_path / "wd" / "events.jsonl"))
+    resumed = KernelScientist.resume(tmp_path / "wd", **_fresh())
+    resumed.run(1)
+    events = EventLog.read(tmp_path / "wd" / "events.jsonl")
+    assert len(events) > n
+    assert [e["seq"] for e in events] == list(range(1, len(events) + 1))
+
+
+def test_fallbacks_keep_generation_alive_when_llm_is_down():
+    class DeadLLM:
+        def complete(self, prompt):
+            raise TransientError("LLM API permanently 503")
+
+    sci = KernelScientist(llm=DeadLLM(), service=EvaluationService(),
+                          retry_policy=NO_WAIT_POLICY)
+    sci.run(2)
+    assert len(sci.logbook) == 2
+    assert all(len(log.submitted) == 3 for log in sci.logbook)
+    # every stage fell back to its deterministic rule-based decision
+    counts = sci.events.counts()
+    assert counts["fallback"] == 2 * (1 + 1 + 3)   # selector+designer+3 writers
+    assert "(rule-based fallback" in sci.logbook[0].selection["rationale"]
