@@ -62,6 +62,6 @@ def run(generations: int = 20, seed: int = 0):
         ("table1/search_quality_floor_frac", floor_us / best.score,
          "1.0 = scientist found the attainable optimum"),
         ("table1/generations", float(generations),
-         f"{sci.service.submissions} sequential submissions"),
+         f"{sci.pool.submissions} platform submissions"),
     ]
     return rows, sci

@@ -1,5 +1,6 @@
 """Full Kernel Scientist run with persisted artifacts: population JSON,
-generation logbook, JSONL event log, and every generated kernel source.
+generation logbook, JSONL event log, eval cache, and every generated kernel
+source.
 
     PYTHONPATH=src python examples/kernel_scientist_run.py --generations 20
 
@@ -8,6 +9,11 @@ The campaign checkpoints after every submission, so an interrupted run
 
     PYTHONPATH=src python examples/kernel_scientist_run.py --resume
 
+``--workers 3`` evaluates the three writer outputs of each generation
+concurrently on three independent evaluation services (the per-service
+sequential contract of §3.4 stays intact — the pool is what scales);
+``--no-eval-cache`` disables the content-addressed result cache that
+otherwise spares the platform from re-timing duplicate submissions.
 ``--fault-rate 0.2`` wraps the backends in the seeded fault injectors to
 rehearse the paper's flaky-shared-queue regime (§3.4) end to end.
 """
@@ -27,6 +33,11 @@ ap.add_argument("--resume", action="store_true",
                 help="continue the campaign persisted in --workdir")
 ap.add_argument("--fault-rate", type=float, default=0.0,
                 help="injected transient-failure rate for LLM + eval queue")
+ap.add_argument("--workers", type=int, default=1,
+                help="concurrent evaluation services (default: the "
+                     "single-worker sequential behaviour)")
+ap.add_argument("--no-eval-cache", action="store_true",
+                help="disable the content-addressed eval result cache")
 args = ap.parse_args()
 
 llm = ScriptedLLM(seed=args.seed)
@@ -37,17 +48,17 @@ if args.fault_rate:
     service = FlakyService(service, seed=args.seed,
                            error_rate=args.fault_rate)
 
+kw = dict(llm=llm, service=service, retry_policy=NO_WAIT_POLICY,
+          workers=args.workers, eval_cache=not args.no_eval_cache)
 if args.resume:
-    sci = KernelScientist.resume(args.workdir, llm=llm, service=service,
-                                 retry_policy=NO_WAIT_POLICY)
+    sci = KernelScientist.resume(args.workdir, **kw)
     print(f"resumed: {len(sci.logbook)} generations, "
           f"{len(sci.population)} kernels already on disk")
     # --generations is the campaign total; run() counts *additional*
     # generations (a resumed in-flight generation counts as one of them)
     todo = max(0, args.generations - len(sci.logbook))
 else:
-    sci = KernelScientist(llm=llm, service=service, workdir=args.workdir,
-                          retry_policy=NO_WAIT_POLICY)
+    sci = KernelScientist(workdir=args.workdir, **kw)
     todo = args.generations
 best = sci.run(generations=todo)
 
@@ -57,9 +68,12 @@ for rec in sci.population:
     (wd / "kernels" / f"{rec.rid}.py").write_text(rec.source)
 print(f"best: {best.rid} {best.score:.1f} us | {best.genome.describe()}")
 print(f"artifacts in {wd}/: population.json, logbook.json, state.json, "
-      f"events.jsonl, kernels/*.py")
+      f"events.jsonl, eval_cache.jsonl, kernels/*.py")
 counts = sci.events.counts()
-print(f"{sci.service.submissions} sequential submissions "
-      f"({len(sci.population)} kernels), "
+stats = sci.pool.stats()
+print(f"{stats['submissions']} platform submissions across "
+      f"{stats['workers']} worker(s) ({len(sci.population)} kernels, "
+      f"{stats.get('cache_hits', 0)} cache hits / "
+      f"{stats.get('cache_misses', 0)} misses), "
       f"{counts.get('retry', 0)} retries, "
       f"{counts.get('fallback', 0)} rule-based fallbacks")

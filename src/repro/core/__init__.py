@@ -3,6 +3,9 @@ an LLM-driven evolutionary loop (Selector -> Designer -> 3x Writer ->
 sequential black-box Evaluation) optimizing one complex accelerator kernel,
 adapted MI300/HIP -> TPU v5e/Pallas (see DESIGN.md §2).
 """
+from .evalpool import (  # noqa: F401
+    PRIORITY_CAMPAIGN, PRIORITY_PROBE, EvalCache, EvalHandle, EvalPool,
+)
 from .evaluator import EvaluationService, estimate_us  # noqa: F401
 from .events import EventLog  # noqa: F401
 from .genome import (  # noqa: F401
@@ -14,6 +17,6 @@ from .population import (  # noqa: F401
 )
 from .resilience import (  # noqa: F401
     DEFAULT_POLICY, NO_WAIT_POLICY, FlakyLLM, FlakyService, RetryPolicy,
-    TransientError, retry_call,
+    ServiceBusyError, TransientError, retry_call,
 )
 from .scientist import GenerationLog, KernelScientist  # noqa: F401

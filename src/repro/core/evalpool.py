@@ -1,0 +1,355 @@
+"""Concurrent evaluation pool + content-addressed eval cache (paper §3.4).
+
+The paper's campaigns were wall-clock-bound by the external evaluation
+queue: one submission in flight at a time, variable service delays, and no
+memory of what the platform had already timed.  This module removes both
+bottlenecks without touching the per-service contract:
+
+* ``EvalPool`` owns N *independent* ``EvaluationService`` workers behind a
+  priority queue.  Each service still processes submissions strictly
+  sequentially (it raises ``ServiceBusyError`` on concurrent use — the
+  "good citizen" rule of §3.4); the pool is what scales, by routing queued
+  submissions to whichever worker is free.  Campaign submissions outrank
+  idle-time work: ``probe()`` enqueues autotune/benchmark probes at low
+  priority, so they only consume a worker when no generation is waiting.
+
+* ``EvalCache`` sits in front of the pool: a content-addressed result store
+  keyed by ``sha256(source)``.  Duplicate submissions — identical fallback
+  kernels, resubmissions after a resume, repeated genomes across
+  generations — return the persisted ``EvalResult`` without consuming a
+  platform slot.  Hits and misses stream to ``events.jsonl``.
+
+Determinism contract (load-bearing — resume and N-worker equivalence both
+depend on it):
+
+1. **Cache key = jitter key = sha256(source).**  The evaluation platform's
+   benchmark jitter is keyed on the submission's content address, *not* on
+   a global submission counter: a concurrent pool has no stable submission
+   ordering, so any order-dependent randomness would make the campaign
+   trajectory depend on thread scheduling.  Content keying makes an
+   ``EvalResult`` a pure function of (platform seed, source, config) —
+   which is exactly the property that makes the result cacheable and makes
+   a ``workers=N`` campaign population-identical to the ``workers=1`` run.
+2. **Pool workers clone the service seed.**  ``EvalPool.of`` builds extra
+   workers with ``service.clone()``; for ``EvaluationService`` the clone
+   keeps the same timing seed, so worker assignment never changes timings.
+   (Fault-injection wrappers clone with a stepped fault seed instead —
+   faults are per-route, results are per-platform.)
+3. **Results are applied in submission order.**  The pool completes jobs in
+   any order; callers that need a deterministic trajectory (the scientist's
+   generation drain) apply results sorted by record id, and persist
+   pending/completed state after every application so a killed campaign
+   resumes mid-drain, trajectory-identically.
+
+The cache persists as append-only JSONL (``eval_cache.jsonl`` in the
+campaign workdir): each completed evaluation appends one line at completion
+time, independent of the scientist's state persistence, so a result that
+was computed but whose campaign state never landed still saves a platform
+slot after resume.  Only platform *verdicts* are cached (ok /
+compile_error / runtime_error / incorrect); submissions that failed at the
+queue level ("failed") never produced a verdict and are always retried.
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+import json
+import pathlib
+import queue
+import threading
+import time
+from typing import Optional
+
+from . import resilience
+from .evaluator import EvalResult
+
+#: Queue priorities (lower value = served first).
+PRIORITY_CAMPAIGN = 0
+PRIORITY_PROBE = 10
+_PRIORITY_SHUTDOWN = 10 ** 9     # sentinels drain after all real work
+
+
+class EvalCache:
+    """Content-addressed ``EvalResult`` store keyed by ``sha256(source)``.
+
+    In-memory by default; given a path, every ``put`` appends one JSONL line
+    so a resumed campaign reloads all previously-computed verdicts.  Torn
+    tail lines (crash mid-append) are skipped on load."""
+
+    def __init__(self, path=None) -> None:
+        self.path = pathlib.Path(path) if path else None
+        self.hits = 0
+        self.misses = 0
+        self._entries: dict[str, EvalResult] = {}
+        self._lock = threading.Lock()
+        if self.path and self.path.exists():
+            for line in self.path.read_text().splitlines():
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    d = json.loads(line)
+                    self._entries[d["key"]] = EvalResult(
+                        d["status"], d.get("error", ""),
+                        d.get("timings_us", {}))
+                except (json.JSONDecodeError, KeyError):
+                    continue
+        elif self.path:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+
+    @staticmethod
+    def key_of(source: str) -> str:
+        return hashlib.sha256(source.encode()).hexdigest()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: str) -> Optional[EvalResult]:
+        """Lookup with hit/miss accounting (one call per submission)."""
+        with self._lock:
+            res = self._entries.get(key)
+            if res is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return res
+
+    def put(self, key: str, result: EvalResult) -> None:
+        with self._lock:
+            if key in self._entries:
+                return
+            self._entries[key] = result
+            if self.path:
+                with open(self.path, "a") as f:
+                    f.write(json.dumps(
+                        {"key": key, "status": result.status,
+                         "error": result.error,
+                         "timings_us": result.timings_us}) + "\n")
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses}
+
+
+class EvalHandle:
+    """Future for one pooled submission.
+
+    ``result()`` blocks until the evaluation completes and returns the
+    ``EvalResult`` — or re-raises whatever the worker raised (including
+    ``BaseException`` such as ``KeyboardInterrupt``, so a killed campaign
+    still unwinds through the drain loop)."""
+
+    def __init__(self, key: str, tag=None) -> None:
+        self.key = key
+        self.tag = tag            # caller metadata (record id) for events
+        self.cached = False
+        self.worker: Optional[int] = None
+        self.duration_s = 0.0
+        self._event = threading.Event()
+        self._result: Optional[EvalResult] = None
+        self._exc: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> EvalResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"evaluation of {self.key[:12]} still running")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def _finish(self, result=None, exc=None) -> None:
+        self._result, self._exc = result, exc
+        self._event.set()
+
+
+class EvalPool:
+    """N sequential-only evaluation services behind one priority queue.
+
+    Worker threads are bound 1:1 to services, spawn on demand, and exit
+    after a short idle period (no resource leak across many short-lived
+    pools).  A submission whose service turns out busy (external
+    contention) raises ``ServiceBusyError``, which the retry policy treats
+    as immediately-reroutable — retried with zero backoff — rather than as
+    a platform fault worth exponential delay."""
+
+    def __init__(self, services, cache: Optional[EvalCache] = None,
+                 retry_policy: Optional[resilience.RetryPolicy] = None,
+                 events=None, sleep=time.sleep,
+                 idle_timeout_s: float = 0.5) -> None:
+        services = list(services)
+        if not services:
+            raise ValueError("EvalPool needs at least one service")
+        self.services = services
+        self.cache = cache
+        self.retry_policy = retry_policy or resilience.DEFAULT_POLICY
+        self.events = events
+        self._sleep = sleep
+        self._idle_s = idle_timeout_s
+        self._queue: queue.PriorityQueue = queue.PriorityQueue()
+        self._threads: dict[int, threading.Thread] = {}
+        self._lock = threading.Lock()
+        self._seq = itertools.count()
+        self._closed = False
+
+    # ----------------------------------------------------------- construct
+    @classmethod
+    def of(cls, service, workers: int = 1, **kwargs) -> "EvalPool":
+        """Pool ``service`` plus ``workers - 1`` clones of it.
+
+        Cloning is chained (each worker clones the previous one) so
+        wrappers that step per-clone state — e.g. ``FlakyService`` fault
+        seeds — give every worker an independent stream."""
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        svcs = [service]
+        while len(svcs) < workers:
+            clone = getattr(svcs[-1], "clone", None)
+            if clone is None:
+                raise TypeError(
+                    f"{type(svcs[-1]).__name__} has no clone(); pass the "
+                    f"worker services explicitly: EvalPool(services=[...])")
+            svcs.append(clone())
+        return cls(svcs, **kwargs)
+
+    # ----------------------------------------------------------------- api
+    def submit_async(self, source: str, priority: int = PRIORITY_CAMPAIGN,
+                     tag=None) -> EvalHandle:
+        """Enqueue one submission; returns immediately with its handle."""
+        if self._closed:
+            raise RuntimeError("EvalPool is closed")
+        handle = EvalHandle(EvalCache.key_of(source), tag=tag)
+        self._queue.put((priority, next(self._seq), source, handle))
+        self._ensure_workers()
+        return handle
+
+    def submit(self, source: str, **kwargs) -> EvalResult:
+        """Blocking convenience wrapper (drop-in for a bare service)."""
+        return self.submit_async(source, **kwargs).result()
+
+    def probe(self, source: str, tag=None) -> EvalHandle:
+        """Low-priority idle-time work (autotune/benchmark probes): only
+        reaches a worker when no campaign submission is queued."""
+        return self.submit_async(source, priority=PRIORITY_PROBE, tag=tag)
+
+    @property
+    def submissions(self) -> int:
+        """Total platform slots consumed across all workers."""
+        return sum(getattr(s, "submissions", 0) for s in self.services)
+
+    def stats(self) -> dict:
+        d = {"workers": len(self.services), "submissions": self.submissions}
+        if self.cache is not None:
+            d.update({f"cache_{k}": v for k, v in self.cache.stats().items()})
+        return d
+
+    def close(self, wait: bool = True) -> None:
+        """Stop accepting work; sentinels drain after already-queued jobs."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            threads = list(self._threads.values())
+        for _ in threads:
+            self._queue.put((_PRIORITY_SHUTDOWN, next(self._seq), None, None))
+        if wait:
+            for t in threads:
+                t.join()
+
+    def __enter__(self) -> "EvalPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------- resumable campaigns
+    def state_dict(self) -> dict:
+        return {"workers": [
+            (s.state_dict() if hasattr(s, "state_dict") else None)
+            for s in self.services]}
+
+    def load_state_dict(self, d) -> None:
+        if not d:
+            return
+        # pre-pool state.json persisted one bare service's state dict
+        worker_states = d["workers"] if "workers" in d else [d]
+        for svc, sd in zip(self.services, worker_states):
+            if sd is not None and hasattr(svc, "load_state_dict"):
+                svc.load_state_dict(sd)
+
+    # ------------------------------------------------------------ internals
+    def _emit(self, event: str, **fields) -> None:
+        if self.events is not None:
+            self.events.emit(event, **fields)
+
+    def _ensure_workers(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            for idx in range(len(self.services)):
+                t = self._threads.get(idx)
+                if t is None or not t.is_alive():
+                    t = threading.Thread(target=self._worker, args=(idx,),
+                                         name=f"evalpool-{idx}", daemon=True)
+                    self._threads[idx] = t
+                    t.start()
+
+    def _worker(self, idx: int) -> None:
+        svc = self.services[idx]
+        while True:
+            try:
+                _, _, source, handle = self._queue.get(timeout=self._idle_s)
+            except queue.Empty:
+                with self._lock:
+                    # exit only while provably idle: a job enqueued before
+                    # this check keeps the thread alive; one enqueued after
+                    # finds the thread dead and _ensure_workers respawns it
+                    if self._queue.empty():
+                        if self._threads.get(idx) is threading.current_thread():
+                            del self._threads[idx]
+                        return
+                continue
+            if source is None:        # shutdown sentinel
+                with self._lock:
+                    if self._threads.get(idx) is threading.current_thread():
+                        del self._threads[idx]
+                return
+            self._run_job(svc, idx, source, handle)
+
+    def _run_job(self, svc, idx: int, source: str, handle: EvalHandle) -> None:
+        t0 = time.perf_counter()
+        handle.worker = idx
+        try:
+            if self.cache is not None:
+                res = self.cache.get(handle.key)
+                if res is not None:
+                    handle.cached = True
+                    self._emit("eval_cache", outcome="hit",
+                               key=handle.key[:12], tag=handle.tag,
+                               worker=idx)
+                    handle.duration_s = time.perf_counter() - t0
+                    handle._finish(result=res)
+                    return
+                self._emit("eval_cache", outcome="miss",
+                           key=handle.key[:12], tag=handle.tag, worker=idx)
+
+            def on_retry(attempt, exc, delay):
+                self._emit("retry", stage="evaluate", tag=handle.tag,
+                           worker=idx, attempt=attempt,
+                           error=f"{type(exc).__name__}: {exc}",
+                           delay_s=round(delay, 3))
+
+            res = resilience.retry_call(
+                lambda: svc.submit(source), policy=self.retry_policy,
+                on_retry=on_retry, sleep=self._sleep)
+            if self.cache is not None:
+                self.cache.put(handle.key, res)
+            handle.duration_s = time.perf_counter() - t0
+            handle._finish(result=res)
+        except BaseException as e:
+            # Exceptions (retries exhausted) become the caller's "failed"
+            # verdict; BaseExceptions (KeyboardInterrupt) surface at drain
+            # so a killed campaign unwinds exactly like the sequential loop.
+            handle.duration_s = time.perf_counter() - t0
+            handle._finish(exc=e)

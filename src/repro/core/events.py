@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import json
 import pathlib
+import threading
 import time
 from typing import Optional
 
@@ -26,6 +27,9 @@ class EventLog:
         self.records: list[dict] = []
         self._seq = 0
         self._clock = clock
+        # EvalPool workers emit from their own threads; keep seq + append
+        # atomic so the JSONL stream stays well-ordered
+        self._lock = threading.Lock()
         if self.path:
             self.path.parent.mkdir(parents=True, exist_ok=True)
             if self.path.exists():  # resumed campaign: continue the sequence
@@ -36,13 +40,14 @@ class EventLog:
                     self._seq = 0
 
     def emit(self, event: str, **fields) -> dict:
-        self._seq += 1
-        rec = {"seq": self._seq, "ts": round(self._clock(), 3),
-               "event": event, **fields}
-        self.records.append(rec)
-        if self.path:
-            with open(self.path, "a") as f:
-                f.write(json.dumps(rec) + "\n")
+        with self._lock:
+            self._seq += 1
+            rec = {"seq": self._seq, "ts": round(self._clock(), 3),
+                   "event": event, **fields}
+            self.records.append(rec)
+            if self.path:
+                with open(self.path, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
         return rec
 
     # ------------------------------------------------------------- queries

@@ -45,6 +45,16 @@ class TransientError(RuntimeError):
     """A failure worth retrying: dropped connection, HTTP 5xx, queue hiccup."""
 
 
+class ServiceBusyError(TransientError):
+    """An evaluation worker is occupied by another in-flight submission.
+
+    Distinct from a real platform fault: the submission never reached the
+    platform, the worker is simply busy, so the right response is to reroute
+    (resubmit immediately, ideally to a different worker) rather than to
+    back off exponentially.  ``RetryPolicy.no_backoff`` encodes exactly
+    that: ``retry_call`` retries these with zero delay."""
+
+
 #: Exception types that ``retry_call`` retries by default.  ``ValueError`` and
 #: ``KeyError`` cover malformed LLM replies (bad JSON, missing schema fields);
 #: ``TimeoutError`` covers per-attempt timeouts; ``ConnectionError`` / OSError
@@ -62,6 +72,9 @@ class RetryPolicy:
     jitter: float = 0.25          # +- fraction of the delay, deterministic
     timeout_s: Optional[float] = None
     retryable: tuple = DEFAULT_RETRYABLE
+    #: Exception types retried with *zero* delay: the failure means "worker
+    #: occupied, reroute now", not "platform unhealthy, back off".
+    no_backoff: tuple = (ServiceBusyError,)
     seed: int = 0
 
     def delay(self, attempt: int) -> float:
@@ -125,7 +138,8 @@ def retry_call(fn: Callable, policy: RetryPolicy = DEFAULT_POLICY,
         except policy.retryable as e:
             if attempt == policy.max_attempts:
                 raise
-            delay = policy.delay(attempt)
+            delay = (0.0 if isinstance(e, policy.no_backoff)
+                     else policy.delay(attempt))
             if on_retry is not None:
                 on_retry(attempt, e, delay)
             if delay:
@@ -238,6 +252,16 @@ class FlakyService:
         self.faults = d.get("faults", 0)
         if d.get("inner") is not None:
             self.inner.load_state_dict(d["inner"])
+
+    def clone(self) -> "FlakyService":
+        """An independent worker for ``EvalPool.of``: same platform (the
+        inner service clones with an identical timing seed) but a distinct
+        fault stream, as two routes into a shared queue would fail
+        independently.  Chained cloning (clone of a clone) steps the fault
+        seed again, giving every pool worker its own stream."""
+        return FlakyService(self.inner.clone(), seed=self.seed + 1,
+                            error_rate=self.error_rate,
+                            timeout_rate=self.timeout_rate)
 
     def __getattr__(self, name):
         # delegate everything else (submissions, bench_configs, ...) so the

@@ -1,7 +1,7 @@
 """The GPU Kernel Scientist closed loop (paper Fig. 1).
 
     seed kernels -> [ Evolutionary Selector -> Experiment Designer (5 plans,
-    pick 3) -> 3x Kernel Writer -> sequential Testing & Evaluation ] * G
+    pick 3) -> 3x Kernel Writer -> pooled Testing & Evaluation ] * G
 
 Everything the paper's loop records is recorded here: population with
 lineage, per-config benchmark timings, experiment descriptions/rubrics,
@@ -26,6 +26,17 @@ campaigns against a flaky shared evaluation queue (§3.4):
   aborting the generation.
 * **Event log.**  Stage timings, retries, fallbacks, and evaluation outcomes
   stream to ``events.jsonl`` (``core.events``) for the §4.4 figure.
+* **Pooled evaluation.**  Submissions go through ``core.evalpool.EvalPool``:
+  each writer output is enqueued as soon as it exists, so the writer stage
+  overlaps with in-flight evaluations and a generation costs roughly
+  ``max(writes) + max(evals)`` instead of ``3 x (write + eval)``.  Results
+  are applied and persisted in record-id order (the pool may complete them
+  in any order), and the in-flight checkpoint tracks both completed
+  (``submitted``) and enqueued-but-unfinished (``pending``) records, so a
+  campaign killed mid-drain resumes trajectory-identically — the pending
+  kernels' sources are durable and simply re-enqueued.  A content-addressed
+  cache in front of the pool returns persisted verdicts for duplicate
+  sources without consuming a platform slot.
 """
 from __future__ import annotations
 
@@ -36,13 +47,17 @@ import time
 from typing import Optional
 
 from . import codegen, designer, prompts, resilience, selector, writer
+from .evalpool import EvalCache, EvalPool
 from .events import EventLog
 from .evaluator import EvaluationService, EvalResult
 from .genome import SEED_LIBRARY, SEED_MXU, SEED_NAIVE, KernelGenome
 from .llm import LLMClient, ScriptedLLM
 from .population import KernelRecord, Population
 
-_STATE_SCHEMA = 1
+# v2: "service" holds EvalPool worker states; inflight gained "pending"
+# (enqueued-but-unfinished record ids).  v1 files load fine: a bare service
+# state dict is treated as the first worker's, and "pending" defaults empty.
+_STATE_SCHEMA = 2
 
 
 def _errtext(e: BaseException) -> str:
@@ -82,9 +97,11 @@ class KernelScientist:
                  workdir: Optional[str] = None,
                  retry_policy: Optional[resilience.RetryPolicy] = None,
                  events: Optional[EventLog] = None,
-                 sleep=time.sleep) -> None:
+                 sleep=time.sleep,
+                 pool: Optional[EvalPool] = None,
+                 workers: int = 1,
+                 eval_cache: bool = True) -> None:
         self.llm = llm or ScriptedLLM()
-        self.service = service or EvaluationService()
         self.task_text = task_text
         self.population = Population()
         self.logbook: list[GenerationLog] = []
@@ -97,6 +114,33 @@ class KernelScientist:
             self.workdir.mkdir(parents=True, exist_ok=True)
         self.events = events or EventLog(
             self.workdir / "events.jsonl" if self.workdir else None)
+        if pool is None:
+            cache = None
+            if eval_cache:
+                cache = EvalCache(self.workdir / "eval_cache.jsonl"
+                                  if self.workdir else None)
+            pool = EvalPool.of(service or EvaluationService(),
+                               workers=workers, cache=cache,
+                               retry_policy=self.retry_policy,
+                               events=self.events, sleep=sleep)
+        elif pool.events is None:
+            pool.events = self.events
+        self.pool = pool
+
+    # The first pool worker doubles as the legacy single-service view;
+    # assigning a new service rebuilds the pool around it (same cache,
+    # policy, and worker count — dropping to one worker if it can't clone).
+    @property
+    def service(self):
+        return self.pool.services[0]
+
+    @service.setter
+    def service(self, svc) -> None:
+        workers = (len(self.pool.services) if hasattr(svc, "clone") else 1)
+        self.pool = EvalPool.of(svc, workers=workers, cache=self.pool.cache,
+                                retry_policy=self.pool.retry_policy,
+                                events=self.pool.events,
+                                sleep=self.pool._sleep)
 
     # ------------------------------------------------------------- resume
     @classmethod
@@ -131,16 +175,19 @@ class KernelScientist:
                            for d in json.loads(logbook_path.read_text())]
         sci._seeded = True
         sci._restore_backend(sci.llm, state.get("llm"))
-        sci._restore_backend(sci.service, state.get("service"))
+        sci.pool.load_state_dict(state.get("service"))
         inflight = state.get("inflight")
         if inflight:
-            # drop records of the interrupted generation that were added but
-            # whose evaluation never persisted — their ids are re-issued when
-            # the generation replays its remaining submissions
-            done = {s[0] for s in inflight["submitted"]}
+            inflight.setdefault("pending", [])
+            # records whose evaluation completed ("submitted") or whose
+            # writer output is durable ("pending" — source persisted, eval
+            # to be re-enqueued) survive; anything else from the interrupted
+            # generation is a ghost whose id is re-issued on replay
+            durable = ({s[0] for s in inflight["submitted"]}
+                       | set(inflight["pending"]))
             ghosts = [r.rid for r in sci.population
                       if r.generation == inflight["generation"]
-                      and r.rid not in done]
+                      and r.rid not in durable]
             for rid in ghosts:
                 sci.population.remove(rid)
             sci._inflight = inflight
@@ -149,7 +196,8 @@ class KernelScientist:
             population=len(sci.population),
             inflight_generation=(inflight["generation"] if inflight else None),
             inflight_submitted=(len(inflight["submitted"]) if inflight
-                                else None))
+                                else None),
+            inflight_pending=(len(inflight["pending"]) if inflight else None))
         return sci
 
     @staticmethod
@@ -168,6 +216,7 @@ class KernelScientist:
         if len(self.population) != 0:
             raise RuntimeError("already seeded")
         self.events.emit("campaign_start", seeds=len(genomes))
+        handles = []
         for genome, desc in zip(genomes, descriptions):
             source = codegen.render_source(genome, desc)
             rec = KernelRecord(
@@ -177,7 +226,9 @@ class KernelScientist:
                             "performance": [0, 0], "innovation": 0},
                 writer_report="(seed kernel)", generation=0)
             self.population.add(rec)
-            self._evaluate_record(rec, source)
+            handles.append((rec, self.pool.submit_async(source, tag=rec.rid)))
+        for rec, handle in handles:   # seeds evaluate concurrently
+            self._apply_handle(rec, handle)
             self._persist()
         self._seeded = True
         self._persist()
@@ -201,26 +252,52 @@ class KernelScientist:
         picked = designer.pick3(plans)
         inflight = {"generation": generation,
                     "selection": dataclasses.asdict(sel),
-                    "plans": plans, "picked": picked, "submitted": []}
+                    "plans": plans, "picked": picked, "submitted": [],
+                    "pending": []}
         self._persist(inflight)
         return self._finish_generation(inflight)
 
     def _finish_generation(self, inflight: dict) -> GenerationLog:
         """Run (or, after a resume, complete) the submission half of a
-        generation from its persisted in-flight checkpoint."""
+        generation from its persisted in-flight checkpoint.
+
+        The writer stage overlaps with in-flight evaluations: each writer
+        output is enqueued on the pool the moment it exists (recorded as
+        ``pending``), then results are applied and persisted in record-id
+        order, so the durable ``submitted`` list is identical whatever
+        order the pool completes them in."""
         generation = inflight["generation"]
         sel = selector.Selection(**inflight["selection"])
         picked = inflight["picked"]
         submitted = [tuple(s) for s in inflight["submitted"]]
+        pending = list(inflight.get("pending", []))
 
-        for exp in picked[len(submitted):]:
-            # three independent writer instances (paper §3.2); the service
-            # still serialises their submissions
-            rec = self._submit_experiment(generation, sel, exp)
+        handles: dict[str, object] = {}
+        for rid in pending:
+            # resumed mid-drain: the writer output is durable — re-enqueue
+            # its evaluation (a duplicate whose verdict already landed in
+            # the cache returns without consuming a platform slot)
+            handles[rid] = self.pool.submit_async(
+                self.population.get(rid).source, tag=rid)
+
+        for exp in picked[len(submitted) + len(pending):]:
+            # three independent writer instances (paper §3.2); each service
+            # still serialises its own submissions — the pool is what scales
+            rec = self._write_experiment(generation, sel, exp)
+            pending.append(rec.rid)
+            inflight["pending"] = list(pending)
+            self._persist(inflight)
+            handles[rec.rid] = self.pool.submit_async(rec.source, tag=rec.rid)
+
+        for rid in sorted(handles):   # apply in submission order
+            rec = self.population.get(rid)
+            self._apply_handle(rec, handles[rid])
+            pending.remove(rid)
             submitted.append((rec.rid, rec.status,
                               rec.score if rec.score != float("inf")
                               else None))
             inflight["submitted"] = [list(s) for s in submitted]
+            inflight["pending"] = list(pending)
             self._persist(inflight)
 
         best = self.population.best()
@@ -242,8 +319,10 @@ class KernelScientist:
                              else round(log.best_geomean_us, 3)))
         return log
 
-    def _submit_experiment(self, generation: int, sel, exp: dict
-                           ) -> KernelRecord:
+    def _write_experiment(self, generation: int, sel, exp: dict
+                          ) -> KernelRecord:
+        """Writer stage only — the record joins the population as
+        ``pending``; its evaluation is the caller's to enqueue."""
         wk = self._stage(
             "writer", generation,
             lambda: writer.write(self.population, sel.basis_code,
@@ -262,7 +341,6 @@ class KernelScientist:
                          "innovation")},
             writer_report=wk.report, generation=generation)
         self.population.add(rec)
-        self._evaluate_record(rec, wk.source)
         return rec
 
     def run(self, generations: int) -> Optional[KernelRecord]:
@@ -310,34 +388,28 @@ class KernelScientist:
                          duration_s=round(time.perf_counter() - t0, 6))
         return out
 
-    def _evaluate_record(self, rec: KernelRecord, source: str) -> None:
-        """Submit under the retry policy; a submission the platform never
-        accepts is marked ``failed`` (with the error text) rather than left
-        ``pending``, so a resumed campaign carries no ghost members."""
-        def on_retry(attempt, exc, delay):
-            self.events.emit("retry", stage="evaluate", rid=rec.rid,
-                             attempt=attempt, error=_errtext(exc),
-                             delay_s=round(delay, 3))
-
-        t0 = time.perf_counter()
+    def _apply_handle(self, rec: KernelRecord, handle) -> None:
+        """Block on one pooled evaluation and apply its outcome.  A
+        submission the platform never accepts (retries exhausted inside the
+        pool worker) is marked ``failed`` rather than left ``pending``, so
+        a resumed campaign carries no ghost members.  BaseExceptions
+        (KeyboardInterrupt — a killed campaign) propagate."""
         try:
-            res = resilience.retry_call(
-                lambda: self.service.submit(source),
-                policy=self.retry_policy, on_retry=on_retry,
-                sleep=self._sleep)
+            res = handle.result()
         except Exception as e:
             rec.status = "failed"
             rec.error = _errtext(e)
             self.events.emit("eval_result", rid=rec.rid, status="failed",
-                             error=rec.error,
-                             duration_s=round(time.perf_counter() - t0, 6))
+                             error=rec.error, cached=handle.cached,
+                             duration_s=round(handle.duration_s, 6))
             return
         self._apply_eval(rec, res)
         self.events.emit(
             "eval_result", rid=rec.rid, status=rec.status,
             geomean_us=(None if rec.score == float("inf")
                         else round(rec.score, 3)),
-            duration_s=round(time.perf_counter() - t0, 6))
+            cached=handle.cached,
+            duration_s=round(handle.duration_s, 6))
 
     def _apply_eval(self, rec: KernelRecord, res: EvalResult) -> None:
         rec.status = res.status
@@ -362,7 +434,7 @@ class KernelScientist:
         state = {"schema": _STATE_SCHEMA,
                  "seeded": self._seeded,
                  "llm": self._backend_state(self.llm),
-                 "service": self._backend_state(self.service),
+                 "service": self.pool.state_dict(),
                  "inflight": inflight}
         tmp = self.workdir / "state.json.tmp"
         tmp.write_text(json.dumps(state, indent=1))

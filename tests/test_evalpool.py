@@ -1,0 +1,345 @@
+"""Concurrent evaluation pool + content-addressed eval cache.
+
+The acceptance scenarios of the eval-throughput layer:
+  * cache accounting — duplicate submissions return the persisted verdict
+    without consuming a platform slot, with hits/misses on the event log;
+  * N-worker equivalence — a ``workers=3`` campaign produces a population
+    bitwise-identical to the ``workers=1`` run (same seed), because
+    benchmark jitter keys on ``sha256(source)``, not submission order;
+  * kill-and-resume mid-pool-drain — a campaign killed while the pool is
+    draining a generation resumes trajectory-identically;
+  * fault soak at ``workers=3`` — the pooled loop survives >= 20% injected
+    transient-failure rate with zero aborted generations (@slow).
+"""
+import json
+import threading
+
+import pytest
+
+from repro.core.evalpool import (
+    PRIORITY_PROBE, EvalCache, EvalPool,
+)
+from repro.core.evaluator import EvalResult, EvaluationService
+from repro.core.llm import ScriptedLLM
+from repro.core.resilience import (
+    NO_WAIT_POLICY, FlakyLLM, FlakyService, RetryPolicy, ServiceBusyError,
+    TransientError, retry_call,
+)
+from repro.core.scientist import KernelScientist
+from repro.core import codegen
+from repro.core.genome import SEED_MXU, SEED_NAIVE
+
+SRC_OK = codegen.render_source(SEED_MXU, "pool test kernel")
+
+
+def _fresh(seed=5, noise=0.05, **kw):
+    return dict(llm=ScriptedLLM(seed=seed),
+                service=EvaluationService(seed=seed, noise=noise),
+                retry_policy=NO_WAIT_POLICY, **kw)
+
+
+def _snapshot(sci):
+    return {
+        "trajectory": sci.trajectory(),
+        "logbook": [l.to_dict() for l in sci.logbook],
+        "population": [(r.rid, r.parents, r.status, r.timings_us)
+                       for r in sci.population],
+    }
+
+
+# ---------------------------------------------------------------------------
+# EvalCache
+# ---------------------------------------------------------------------------
+def test_cache_hit_miss_accounting(tmp_path):
+    cache = EvalCache(tmp_path / "cache.jsonl")
+    key = EvalCache.key_of("some kernel source")
+    assert cache.get(key) is None
+    assert (cache.hits, cache.misses) == (0, 1)
+    cache.put(key, EvalResult("ok", timings_us={"m1_n1_k1": 2.5}))
+    hit = cache.get(key)
+    assert hit.status == "ok" and hit.timings_us == {"m1_n1_k1": 2.5}
+    assert (cache.hits, cache.misses) == (1, 1)
+
+    # persisted: a fresh cache on the same path reloads every verdict
+    reloaded = EvalCache(tmp_path / "cache.jsonl")
+    assert len(reloaded) == 1
+    assert reloaded.get(key).timings_us == {"m1_n1_k1": 2.5}
+
+
+def test_cache_skips_torn_tail_line(tmp_path):
+    path = tmp_path / "cache.jsonl"
+    good = json.dumps({"key": "k1", "status": "ok",
+                       "timings_us": {"a": 1.0}})
+    path.write_text(good + "\n" + '{"key": "k2", "status"')  # crash mid-append
+    cache = EvalCache(path)
+    assert len(cache) == 1 and cache.get("k1").status == "ok"
+
+
+def test_pool_duplicate_submission_spares_platform_slot():
+    svc = EvaluationService()
+    with EvalPool([svc], cache=EvalCache(),
+                  retry_policy=NO_WAIT_POLICY) as pool:
+        first = pool.submit_async(SRC_OK)
+        second_res = pool.submit(SRC_OK)     # duplicate: served from cache
+        assert first.result().status == "ok"
+        assert second_res.status == "ok"
+        assert second_res.timings_us == first.result().timings_us
+        assert svc.submissions == 1          # one platform slot consumed
+        assert pool.cache.stats() == {"entries": 1, "hits": 1, "misses": 1}
+
+
+def test_pool_streams_cache_events():
+    from repro.core.events import EventLog
+    events = EventLog()
+    with EvalPool([EvaluationService()], cache=EvalCache(), events=events,
+                  retry_policy=NO_WAIT_POLICY) as pool:
+        pool.submit(SRC_OK, tag="00001")
+        pool.submit(SRC_OK, tag="00009")
+    outcomes = [(e["outcome"], e["tag"]) for e in events.select("eval_cache")]
+    assert outcomes == [("miss", "00001"), ("hit", "00009")]
+    assert all(e["key"] for e in events.select("eval_cache"))
+
+
+# ---------------------------------------------------------------------------
+# ServiceBusyError: typed busy signal, rerouted without backoff
+# ---------------------------------------------------------------------------
+def test_busy_service_raises_typed_error():
+    svc = EvaluationService()
+    svc._lock.acquire()
+    try:
+        with pytest.raises(ServiceBusyError, match="sequential"):
+            svc.submit("x = 1")
+    finally:
+        svc._lock.release()
+    assert issubclass(ServiceBusyError, TransientError)  # still retryable
+
+
+def test_busy_retries_immediately_transient_backs_off():
+    policy = RetryPolicy(base_delay_s=0.5, jitter=0.0)
+    slept = []
+
+    calls = []
+    def busy_then_ok():
+        calls.append(1)
+        if len(calls) < 3:
+            raise ServiceBusyError("worker occupied")
+        return "ok"
+
+    assert retry_call(busy_then_ok, policy=policy,
+                      sleep=slept.append) == "ok"
+    assert slept == []                       # rerouted, never backed off
+
+    calls.clear()
+    def flaky_then_ok():
+        calls.append(1)
+        if len(calls) < 2:
+            raise TransientError("platform fault")
+        return "ok"
+
+    assert retry_call(flaky_then_ok, policy=policy,
+                      sleep=slept.append) == "ok"
+    assert slept == [0.5]                    # real faults still back off
+
+
+# ---------------------------------------------------------------------------
+# Evaluator memoization + content-keyed jitter
+# ---------------------------------------------------------------------------
+def test_problem_and_oracle_memoized_per_config_seed():
+    svc = EvaluationService()
+    cfg = svc.correctness_config
+    p1 = svc._problem(cfg, seed=1234)
+    want1 = svc._oracle(cfg, seed=1234)
+    assert svc._problem(cfg, seed=1234) is p1        # same tuple object
+    assert svc._oracle(cfg, seed=1234) is want1
+    assert svc._problem(cfg, seed=7) is not p1       # distinct per seed
+    # two submissions reuse one oracle: memo does not grow
+    svc.submit(SRC_OK)
+    n = len(svc._memo)
+    svc.submit(SRC_OK + "# variant\n")
+    assert len(svc._memo) == n
+
+
+def test_jitter_keyed_on_content_not_submission_order():
+    src_a = codegen.render_source(SEED_NAIVE, "a")
+    src_b = codegen.render_source(SEED_MXU, "b")
+    one = EvaluationService(noise=0.05, seed=7)
+    one.submit(src_a)                        # shift the submission counter
+    shifted = one.submit(src_b)
+    fresh = EvaluationService(noise=0.05, seed=7).submit(src_b)
+    assert shifted.timings_us == fresh.timings_us
+    # a different platform seed still yields different noise
+    other = EvaluationService(noise=0.05, seed=8).submit(src_b)
+    assert other.timings_us != fresh.timings_us
+
+
+def test_service_clone_shares_timing_seed():
+    svc = EvaluationService(noise=0.05, seed=3, latency_s=0.0)
+    clone = svc.clone()
+    assert clone is not svc
+    assert clone.submit(SRC_OK).timings_us == svc.submit(SRC_OK).timings_us
+
+
+# ---------------------------------------------------------------------------
+# Priority queue: campaign submissions outrank idle probes
+# ---------------------------------------------------------------------------
+class _GatedService:
+    """First submission blocks on a gate so later queue entries pile up."""
+
+    def __init__(self):
+        self.entered = threading.Event()
+        self.gate = threading.Event()
+        self.order = []
+        self.submissions = 0
+
+    def submit(self, source):
+        self.submissions += 1
+        if source == "BLOCK":
+            self.entered.set()
+            assert self.gate.wait(timeout=30)
+        self.order.append(source)
+        return EvalResult("ok", timings_us={"m1_n1_k1": 1.0})
+
+
+def test_probe_yields_to_campaign_submission():
+    svc = _GatedService()
+    pool = EvalPool([svc], retry_policy=NO_WAIT_POLICY)
+    blocker = pool.submit_async("BLOCK")
+    assert svc.entered.wait(timeout=30)      # worker is now occupied
+    probe = pool.probe("PROBE")              # queued first...
+    campaign = pool.submit_async("CAMPAIGN")  # ...but outranked
+    svc.gate.set()
+    for h in (blocker, campaign, probe):
+        assert h.result(timeout=30).status == "ok"
+    assert svc.order == ["BLOCK", "CAMPAIGN", "PROBE"]
+    pool.close()
+
+
+def test_pool_state_dict_accepts_legacy_single_service_state():
+    pool = EvalPool.of(EvaluationService(), workers=2,
+                       retry_policy=NO_WAIT_POLICY)
+    pool.load_state_dict({"submissions": 7})          # pre-pool state.json
+    assert pool.services[0].submissions == 7
+    sd = pool.state_dict()
+    assert [w["submissions"] for w in sd["workers"]] == [7, 0]
+    pool2 = EvalPool.of(EvaluationService(), workers=2,
+                        retry_policy=NO_WAIT_POLICY)
+    pool2.load_state_dict(sd)
+    assert pool2.submissions == 7
+
+
+# ---------------------------------------------------------------------------
+# N-worker equivalence (acceptance: 6 generations, noise=0.05)
+# ---------------------------------------------------------------------------
+def test_three_workers_reproduce_single_worker_campaign():
+    one = KernelScientist(**_fresh())
+    best1 = one.run(6)
+    three = KernelScientist(**_fresh(workers=3))
+    best3 = three.run(6)
+    assert _snapshot(three) == _snapshot(one)
+    assert best3.rid == best1.rid and best3.score == best1.score
+    assert three.pool.stats()["workers"] == 3
+    one.pool.close()
+    three.pool.close()
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-resume mid-pool-drain
+# ---------------------------------------------------------------------------
+class _Counter:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.n = 0
+
+
+class _SharedCrashService:
+    """Raises KeyboardInterrupt (a real kill) on the n-th submission across
+    the whole pool — whichever worker happens to draw it."""
+
+    def __init__(self, inner, counter, crash_at):
+        self.inner = inner
+        self.counter = counter
+        self.crash_at = crash_at
+
+    def submit(self, source):
+        with self.counter.lock:
+            self.counter.n += 1
+            n = self.counter.n
+        if n == self.crash_at:
+            raise KeyboardInterrupt
+        return self.inner.submit(source)
+
+    def clone(self):
+        return _SharedCrashService(self.inner.clone(), self.counter,
+                                   self.crash_at)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def test_kill_and_resume_mid_pool_drain_workers3(tmp_path):
+    ref = KernelScientist(**_fresh(workers=3))
+    ref.run(6)
+
+    kw = _fresh(workers=3)
+    kw["service"] = _SharedCrashService(kw["service"], _Counter(), crash_at=8)
+    sci = KernelScientist(**kw, workdir=tmp_path / "wd")
+    with pytest.raises(KeyboardInterrupt):
+        sci.run(6)
+    sci.pool.close()                         # quiesce the surviving workers
+    assert len(sci.logbook) < 6              # the campaign really was cut
+
+    resumed = KernelScientist.resume(tmp_path / "wd", **_fresh(workers=3))
+    resumed.run(6 - len(resumed.logbook))
+    assert _snapshot(resumed) == _snapshot(ref)
+    ref.pool.close()
+    resumed.pool.close()
+
+
+def test_resumed_campaign_serves_reprobes_from_cache(tmp_path):
+    sci = KernelScientist(**_fresh(), workdir=tmp_path / "wd")
+    sci.run(3)
+    sci.pool.close()
+    assert (tmp_path / "wd" / "eval_cache.jsonl").exists()
+
+    resumed = KernelScientist.resume(tmp_path / "wd", **_fresh())
+    before = resumed.pool.submissions
+    handles = [resumed.pool.probe(r.source, tag=r.rid)
+               for r in resumed.population]
+    results = [h.result() for h in handles]
+    assert all(r.status in ("ok", "compile_error", "runtime_error",
+                            "incorrect") for r in results)
+    assert resumed.pool.cache.hits == len(results) > 0
+    assert resumed.pool.submissions == before     # zero platform slots
+    # re-probed timings match what the campaign recorded
+    for rec in resumed.population:
+        if rec.status == "ok":
+            probe = resumed.pool.submit(rec.source)
+            assert probe.timings_us == rec.timings_us
+    resumed.pool.close()
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection stress at workers=3
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_stress_20pct_faults_workers3_completes_10_generations():
+    llm = FlakyLLM(ScriptedLLM(seed=11), seed=13,
+                   error_rate=0.10, timeout_rate=0.04, malformed_rate=0.06)
+    service = FlakyService(EvaluationService(seed=11), seed=17,
+                           error_rate=0.20)
+    sci = KernelScientist(llm=llm, service=service, workers=3,
+                          retry_policy=NO_WAIT_POLICY)
+    best = sci.run(10)
+
+    assert len(sci.logbook) == 10            # zero aborted generations
+    assert all(len(log.submitted) == 3 for log in sci.logbook)
+    assert len(sci.population) == 3 + 30
+    assert best is not None and best.score < float("inf")
+    # the pool really had 3 independent fault streams under fire
+    fault_seeds = [s.seed for s in sci.pool.services]
+    assert fault_seeds == [17, 18, 19]
+    assert sum(s.faults for s in sci.pool.services) > 0
+    assert sci.events.counts().get("retry", 0) > 0
+    traj = [v for _, v in sci.trajectory() if v is not None]
+    assert traj == sorted(traj, reverse=True)  # still monotone best-so-far
+    sci.pool.close()
