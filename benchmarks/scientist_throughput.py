@@ -17,29 +17,40 @@ import pathlib
 import tempfile
 import time
 
-from repro.core import (EvaluationService, KernelScientist, NO_WAIT_POLICY,
-                        ScriptedLLM)
+from repro.core import (EvalCache, EvalPool, EvaluationService,
+                        KernelScientist, NO_WAIT_POLICY, ScriptedLLM)
 
 DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_scientist.json"
 
 
-def _campaign(workdir, seed, noise, latency_s, workers):
+def _backend(workdir, seed, noise, latency_s, workers, transport):
+    return EvalPool.of(
+        EvaluationService(noise=noise, seed=seed, latency_s=latency_s),
+        workers=workers, cache=EvalCache(
+            pathlib.Path(workdir) / "eval_cache.jsonl"),
+        retry_policy=NO_WAIT_POLICY, transport=transport)
+
+
+def _campaign(workdir, seed, noise, latency_s, workers,
+              transport="inprocess"):
     return KernelScientist(
         llm=ScriptedLLM(seed=seed),
-        service=EvaluationService(noise=noise, seed=seed,
-                                  latency_s=latency_s),
-        workers=workers, workdir=workdir, retry_policy=NO_WAIT_POLICY)
+        backend=_backend(workdir, seed, noise, latency_s, workers,
+                         transport),
+        workdir=workdir, retry_policy=NO_WAIT_POLICY)
 
 
 def run(generations: int = 6, seed: int = 3, noise: float = 0.05,
-        latency_s: float = 0.9, out_path=DEFAULT_OUT):
+        latency_s: float = 0.9, out_path=DEFAULT_OUT,
+        transport: str = "inprocess"):
     rows, bench = [], {"generations": generations, "seed": seed,
-                       "noise": noise, "latency_s": latency_s, "workers": {}}
+                       "noise": noise, "latency_s": latency_s,
+                       "transport": transport, "workers": {}}
     for workers in (1, 3):
         with tempfile.TemporaryDirectory() as wd:
             t0 = time.perf_counter()
-            sci = _campaign(wd, seed, noise, latency_s, workers)
+            sci = _campaign(wd, seed, noise, latency_s, workers, transport)
             best = sci.run(generations)
             wall_s = time.perf_counter() - t0
             stats = sci.pool.stats()
@@ -51,9 +62,9 @@ def run(generations: int = 6, seed: int = 3, noise: float = 0.05,
             # everything the platform has already timed
             resumed = KernelScientist.resume(
                 wd, llm=ScriptedLLM(seed=seed),
-                service=EvaluationService(noise=noise, seed=seed,
-                                          latency_s=latency_s),
-                workers=workers, retry_policy=NO_WAIT_POLICY)
+                backend=_backend(wd, seed, noise, latency_s, workers,
+                                 transport),
+                retry_policy=NO_WAIT_POLICY)
             handles = [resumed.pool.probe(r.source, tag=r.rid)
                        for r in resumed.population]
             for h in handles:

@@ -18,7 +18,7 @@ def run(generations: int = 14, seed: int = 1, fault_rate: float = 0.0):
         llm = FlakyLLM(llm, seed=seed, error_rate=fault_rate / 2,
                        malformed_rate=fault_rate / 2)
         service = FlakyService(service, seed=seed, error_rate=fault_rate)
-    sci = KernelScientist(llm=llm, service=service,
+    sci = KernelScientist(llm=llm, backend=service,
                           retry_policy=NO_WAIT_POLICY)
     sci.run(generations=generations)
     rows = []

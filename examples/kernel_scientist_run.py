@@ -9,19 +9,25 @@ The campaign checkpoints after every submission, so an interrupted run
 
     PYTHONPATH=src python examples/kernel_scientist_run.py --resume
 
-``--workers 3`` evaluates the three writer outputs of each generation
-concurrently on three independent evaluation services (the per-service
-sequential contract of §3.4 stays intact — the pool is what scales);
-``--no-eval-cache`` disables the content-addressed result cache that
-otherwise spares the platform from re-timing duplicate submissions.
-``--fault-rate 0.2`` wraps the backends in the seeded fault injectors to
-rehearse the paper's flaky-shared-queue regime (§3.4) end to end.
+The evaluation backend is built explicitly and handed to the scientist as
+``backend=`` (the ``EvalBackend`` surface).  ``--workers 3`` evaluates the
+three writer outputs of each generation concurrently on three independent
+evaluation services (the per-service sequential contract of §3.4 stays
+intact — the pool is what scales); ``--transport subprocess`` isolates each
+worker in its own Python process behind the JSONL wire protocol, so a
+worker death mid-benchmark costs one requeue instead of the campaign
+(rehearse that with ``--kill-rate 0.2``).  ``--cache-max-entries N`` caps
+the content-addressed eval cache as an LRU with on-disk compaction;
+``--no-eval-cache`` disables it entirely.  ``--fault-rate 0.2`` wraps the
+backends in the seeded fault injectors to rehearse the paper's
+flaky-shared-queue regime (§3.4) end to end.
 """
 import argparse
 import pathlib
 
-from repro.core import (EvaluationService, FlakyLLM, FlakyService,
-                        KernelScientist, NO_WAIT_POLICY, ScriptedLLM)
+from repro.core import (CrashService, EvalCache, EvalPool, EvaluationService,
+                        FlakyLLM, FlakyService, KernelScientist,
+                        NO_WAIT_POLICY, ScriptedLLM)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--generations", type=int, default=20)
@@ -36,9 +42,22 @@ ap.add_argument("--fault-rate", type=float, default=0.0,
 ap.add_argument("--workers", type=int, default=1,
                 help="concurrent evaluation services (default: the "
                      "single-worker sequential behaviour)")
+ap.add_argument("--transport", choices=("inprocess", "subprocess"),
+                default="inprocess",
+                help="run eval workers as threads in this process or as "
+                     "isolated subprocess workers (crash containment)")
+ap.add_argument("--kill-rate", type=float, default=0.0,
+                help="injected worker-death rate (requires "
+                     "--transport subprocess; deaths requeue the job)")
+ap.add_argument("--cache-max-entries", type=int, default=None,
+                help="LRU cap for the eval cache (default: unbounded)")
 ap.add_argument("--no-eval-cache", action="store_true",
                 help="disable the content-addressed eval result cache")
 args = ap.parse_args()
+
+if args.kill_rate and args.transport != "subprocess":
+    ap.error("--kill-rate kills whole workers; it needs "
+             "--transport subprocess to be survivable")
 
 llm = ScriptedLLM(seed=args.seed)
 service = EvaluationService(noise=args.noise, seed=args.seed)
@@ -47,22 +66,31 @@ if args.fault_rate:
                    malformed_rate=args.fault_rate / 2)
     service = FlakyService(service, seed=args.seed,
                            error_rate=args.fault_rate)
+if args.kill_rate:
+    service = CrashService(service, seed=args.seed,
+                           crash_rate=args.kill_rate)
 
-kw = dict(llm=llm, service=service, retry_policy=NO_WAIT_POLICY,
-          workers=args.workers, eval_cache=not args.no_eval_cache)
+wd = pathlib.Path(args.workdir)
+cache = (None if args.no_eval_cache else
+         EvalCache(wd / "eval_cache.jsonl",
+                   max_entries=args.cache_max_entries))
+backend = EvalPool.of(service, workers=args.workers, cache=cache,
+                      retry_policy=NO_WAIT_POLICY,
+                      transport=args.transport)
 if args.resume:
-    sci = KernelScientist.resume(args.workdir, **kw)
+    sci = KernelScientist.resume(args.workdir, llm=llm, backend=backend,
+                                 retry_policy=NO_WAIT_POLICY)
     print(f"resumed: {len(sci.logbook)} generations, "
           f"{len(sci.population)} kernels already on disk")
     # --generations is the campaign total; run() counts *additional*
     # generations (a resumed in-flight generation counts as one of them)
     todo = max(0, args.generations - len(sci.logbook))
 else:
-    sci = KernelScientist(workdir=args.workdir, **kw)
+    sci = KernelScientist(llm=llm, backend=backend, workdir=args.workdir,
+                          retry_policy=NO_WAIT_POLICY)
     todo = args.generations
 best = sci.run(generations=todo)
 
-wd = pathlib.Path(args.workdir)
 (wd / "kernels").mkdir(exist_ok=True)
 for rec in sci.population:
     (wd / "kernels" / f"{rec.rid}.py").write_text(rec.source)
@@ -71,9 +99,14 @@ print(f"artifacts in {wd}/: population.json, logbook.json, state.json, "
       f"events.jsonl, eval_cache.jsonl, kernels/*.py")
 counts = sci.events.counts()
 stats = sci.pool.stats()
+sci.pool.close()
 print(f"{stats['submissions']} platform submissions across "
-      f"{stats['workers']} worker(s) ({len(sci.population)} kernels, "
+      f"{stats['workers']} {stats['transport']} worker(s) "
+      f"({len(sci.population)} kernels, "
       f"{stats.get('cache_hits', 0)} cache hits / "
-      f"{stats.get('cache_misses', 0)} misses), "
+      f"{stats.get('cache_misses', 0)} misses, "
+      f"{stats.get('cache_evictions', 0)} evictions), "
       f"{counts.get('retry', 0)} retries, "
+      f"{counts.get('worker_died', 0)} worker deaths / "
+      f"{counts.get('worker_requeue', 0)} requeues, "
       f"{counts.get('fallback', 0)} rule-based fallbacks")

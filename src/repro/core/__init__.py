@@ -1,22 +1,57 @@
 """The paper's primary contribution: the GPU Kernel Scientist —
 an LLM-driven evolutionary loop (Selector -> Designer -> 3x Writer ->
-sequential black-box Evaluation) optimizing one complex accelerator kernel,
+pooled black-box Evaluation) optimizing one complex accelerator kernel,
 adapted MI300/HIP -> TPU v5e/Pallas (see DESIGN.md §2).
+
+``__all__`` is the supported public surface: the scientist loop, the
+evaluation backend API (``EvalBackend`` / ``EvalPool`` / transports /
+cache), the resilience toolkit, and the genome/population data model.
+Anything not listed here is internal and may change without notice.
 """
-from .evalpool import (  # noqa: F401
-    PRIORITY_CAMPAIGN, PRIORITY_PROBE, EvalCache, EvalHandle, EvalPool,
+from .evalpool import (
+    PRIORITY_CAMPAIGN, PRIORITY_PROBE, PRIORITY_URGENT,
+    EvalBackend, EvalCache, EvalHandle, EvalPool,
 )
-from .evaluator import EvaluationService, estimate_us  # noqa: F401
-from .events import EventLog  # noqa: F401
-from .genome import (  # noqa: F401
+from .evaluator import EvalResult, EvaluationService, estimate_us
+from .events import WORKER_LIFECYCLE_EVENTS, EventLog
+from .genome import (
     SEED_LIBRARY, SEED_MONOLITH, SEED_MXU, SEED_NAIVE, KernelGenome,
 )
-from .llm import HTTPChatLLM, LLMClient, ScriptedLLM  # noqa: F401
-from .population import (  # noqa: F401
+from .llm import HTTPChatLLM, LLMClient, ScriptedLLM
+from .population import (
     BENCH_CONFIGS_6, BENCH_CONFIGS_18, KernelRecord, Population,
 )
-from .resilience import (  # noqa: F401
-    DEFAULT_POLICY, NO_WAIT_POLICY, FlakyLLM, FlakyService, RetryPolicy,
-    ServiceBusyError, TransientError, retry_call,
+from .resilience import (
+    DEFAULT_POLICY, NO_WAIT_POLICY, CrashService, FlakyLLM, FlakyService,
+    RetryPolicy, ServiceBusyError, TransientError, retry_call,
 )
-from .scientist import GenerationLog, KernelScientist  # noqa: F401
+from .scientist import GenerationLog, KernelScientist
+from .transport import (
+    InProcessTransport, RemoteEvalError, SubprocessTransport,
+    WorkerDiedError, WorkerTransport,
+)
+
+__all__ = [
+    # scientist loop
+    "KernelScientist", "GenerationLog",
+    # evaluation backend API
+    "EvalBackend", "EvalPool", "EvalCache", "EvalHandle",
+    "PRIORITY_URGENT", "PRIORITY_CAMPAIGN", "PRIORITY_PROBE",
+    # transports
+    "WorkerTransport", "InProcessTransport", "SubprocessTransport",
+    "WorkerDiedError", "RemoteEvalError",
+    # evaluation platform
+    "EvaluationService", "EvalResult", "estimate_us",
+    # resilience
+    "RetryPolicy", "retry_call", "DEFAULT_POLICY", "NO_WAIT_POLICY",
+    "TransientError", "ServiceBusyError",
+    "FlakyLLM", "FlakyService", "CrashService",
+    # events
+    "EventLog", "WORKER_LIFECYCLE_EVENTS",
+    # LLM clients
+    "LLMClient", "ScriptedLLM", "HTTPChatLLM",
+    # data model
+    "KernelGenome", "KernelRecord", "Population",
+    "BENCH_CONFIGS_6", "BENCH_CONFIGS_18",
+    "SEED_LIBRARY", "SEED_NAIVE", "SEED_MXU", "SEED_MONOLITH",
+]

@@ -1,0 +1,200 @@
+"""Subprocess evaluation worker — ``python -m repro.core.eval_worker``.
+
+The child half of :class:`repro.core.transport.SubprocessTransport`.  Reads
+length-prefixed JSONL frames on stdin, writes frames on stdout:
+
+1. receives the ``init`` frame, builds its ``EvaluationService`` (or a
+   fault-injection wrapper stack) from the JSON *service spec*, replies
+   ``hello``;
+2. starts a heartbeat thread that emits a ``heartbeat`` frame every
+   ``heartbeat_interval_s`` — including while an evaluation is running, so
+   the parent can tell "slow benchmark" from "dead process";
+3. loops: each ``submit`` frame is evaluated under the (numeric subset of
+   the) parent's retry policy and answered with a ``result`` frame, or an
+   ``error`` frame when the retries are exhausted;
+4. exits on the ``shutdown`` frame or stdin EOF.
+
+Service specs
+-------------
+A spec is ``{"kind": ..., ...}``; wrapper kinds nest an ``"inner"`` spec.
+Producers are the ``service_spec()`` methods on ``EvaluationService`` /
+``FlakyService`` / ``CrashService``; :func:`build_service` is the single
+consumer.  The *incarnation* (how many times this worker slot has been
+respawned) is folded into fault-injection seeds so a deterministic crash
+draw cannot kill every respawn at the same call index forever.
+
+Two extra kinds exist for protocol tests and transport diagnostics without
+pulling jax into the child: ``echo`` (instant content-keyed verdicts) and
+``sleepy`` (stalls on matching sources for incarnation 0 — exercises the
+parent's deadline/requeue path).
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import sys
+import threading
+import time
+
+from . import resilience
+from .evaluator import EvalResult
+from .transport import read_frame, write_frame
+
+
+class EchoService:
+    """Instant deterministic verdicts keyed on the source content — the
+    platform contract (content-pure results) without jax or the cost model.
+    For wire-protocol and liveness tests only."""
+
+    def __init__(self, latency_s: float = 0.0) -> None:
+        self.latency_s = latency_s
+        self.submissions = 0
+
+    def submit(self, source: str) -> EvalResult:
+        self.submissions += 1
+        if self.latency_s:
+            time.sleep(self.latency_s)
+        digest = hashlib.sha256(source.encode()).hexdigest()
+        return EvalResult("ok", timings_us={
+            "len": float(len(source)),
+            "sha16": float(int(digest[:4], 16))})
+
+    def clone(self) -> "EchoService":
+        return EchoService(latency_s=self.latency_s)
+
+    def service_spec(self) -> dict:
+        return {"kind": "echo", "latency_s": self.latency_s}
+
+
+class SleepyService:
+    """Stalls (sleeps ``sleep_s``) on sources containing ``match`` — but
+    only at incarnation 0, so the respawned worker makes progress.  Drives
+    the parent's stall-deadline detection in tests."""
+
+    def __init__(self, inner, match: str = "STALL", sleep_s: float = 30.0,
+                 incarnation: int = 0) -> None:
+        self.inner = inner
+        self.match = match
+        self.sleep_s = sleep_s
+        self.incarnation = incarnation
+
+    def submit(self, source: str) -> EvalResult:
+        if self.incarnation == 0 and self.match in source:
+            time.sleep(self.sleep_s)
+        return self.inner.submit(source)
+
+    def clone(self) -> "SleepyService":
+        return SleepyService(self.inner.clone(), match=self.match,
+                             sleep_s=self.sleep_s,
+                             incarnation=self.incarnation)
+
+    def service_spec(self) -> dict:
+        return {"kind": "sleepy", "inner": self.inner.service_spec(),
+                "match": self.match, "sleep_s": self.sleep_s}
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def build_service(spec: dict, incarnation: int = 0):
+    """Rebuild a service (stack) from its JSON spec inside the worker."""
+    kind = spec.get("kind")
+    if kind == "evaluation":
+        from .evaluator import EvaluationService
+        kwargs = {k: spec[k] for k in
+                  ("backend", "noise", "seed", "rtol", "latency_s")
+                  if k in spec}
+        if "bench_configs" in spec:
+            kwargs["bench_configs"] = tuple(
+                tuple(c) for c in spec["bench_configs"])
+        if "correctness_config" in spec:
+            kwargs["correctness_config"] = tuple(spec["correctness_config"])
+        return EvaluationService(**kwargs)
+    if kind == "flaky":
+        from .resilience import FlakyService
+        return FlakyService(
+            build_service(spec["inner"], incarnation),
+            seed=spec.get("seed", 0),
+            error_rate=spec.get("error_rate", 0.1),
+            timeout_rate=spec.get("timeout_rate", 0.0))
+    if kind == "crash":
+        from .resilience import CrashService
+        return CrashService(
+            build_service(spec["inner"], incarnation),
+            seed=spec.get("seed", 0),
+            crash_rate=spec.get("crash_rate", 0.1),
+            incarnation=incarnation)
+    if kind == "echo":
+        return EchoService(latency_s=spec.get("latency_s", 0.0))
+    if kind == "sleepy":
+        return SleepyService(
+            build_service(spec["inner"], incarnation),
+            match=spec.get("match", "STALL"),
+            sleep_s=spec.get("sleep_s", 30.0),
+            incarnation=incarnation)
+    raise ValueError(f"unknown service spec kind {kind!r}")
+
+
+def _policy_from(d) -> resilience.RetryPolicy:
+    if not d:
+        return resilience.DEFAULT_POLICY
+    return resilience.RetryPolicy(
+        **{k: v for k, v in d.items()
+           if k in ("max_attempts", "base_delay_s", "multiplier",
+                    "max_delay_s", "jitter", "timeout_s", "seed")})
+
+
+def serve(stdin, stdout) -> None:
+    """Frame loop over binary streams (factored out for in-process tests)."""
+    init = read_frame(stdin)
+    if not init or init.get("frame") != "init":
+        raise SystemExit("eval_worker: expected an init frame first")
+    incarnation = init.get("incarnation", 0)
+    service = build_service(init["spec"], incarnation=incarnation)
+    policy = _policy_from(init.get("policy"))
+
+    wlock = threading.Lock()
+
+    def send(obj: dict) -> None:
+        with wlock:
+            write_frame(stdout, obj)
+
+    send({"frame": "hello", "pid": os.getpid(),
+          "worker": init.get("worker"), "incarnation": incarnation})
+
+    stop = threading.Event()
+    interval = init.get("heartbeat_interval_s", 0.5)
+
+    def beat() -> None:
+        while not stop.wait(interval):
+            try:
+                send({"frame": "heartbeat"})
+            except (OSError, ValueError):
+                os._exit(0)       # parent went away; nothing left to serve
+
+    threading.Thread(target=beat, daemon=True).start()
+
+    while True:
+        frame = read_frame(stdin)
+        if frame is None or frame.get("frame") == "shutdown":
+            break
+        if frame.get("frame") != "submit":
+            continue
+        job_id = frame.get("job_id")
+        try:
+            res = resilience.retry_call(
+                lambda: service.submit(frame["source"]), policy=policy)
+            send({"frame": "result", "job_id": job_id, "status": res.status,
+                  "error": res.error, "timings_us": res.timings_us})
+        except Exception as e:
+            send({"frame": "error", "job_id": job_id,
+                  "error": f"{type(e).__name__}: {e}"})
+    stop.set()
+
+
+def main() -> None:
+    serve(sys.stdin.buffer, sys.stdout.buffer)
+
+
+if __name__ == "__main__":
+    main()

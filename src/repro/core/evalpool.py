@@ -1,56 +1,84 @@
-"""Concurrent evaluation pool + content-addressed eval cache (paper §3.4).
+"""Distributed evaluation subsystem: the ``EvalBackend`` API, the pooled
+scheduler, worker transports, and the content-addressed eval cache (§3.4).
 
 The paper's campaigns were wall-clock-bound by the external evaluation
-queue: one submission in flight at a time, variable service delays, and no
-memory of what the platform had already timed.  This module removes both
-bottlenecks without touching the per-service contract:
+queue: one submission in flight at a time, variable service delays, no
+memory of what the platform had already timed — and, over multi-day runs,
+workers that die mid-benchmark.  This module is the eval-throughput
+authority that removes those bottlenecks behind one small API.
 
-* ``EvalPool`` owns N *independent* ``EvaluationService`` workers behind a
-  priority queue.  Each service still processes submissions strictly
-  sequentially (it raises ``ServiceBusyError`` on concurrent use — the
-  "good citizen" rule of §3.4); the pool is what scales, by routing queued
-  submissions to whichever worker is free.  Campaign submissions outrank
-  idle-time work: ``probe()`` enqueues autotune/benchmark probes at low
-  priority, so they only consume a worker when no generation is waiting.
+``EvalBackend`` protocol
+------------------------
+Everything the scientist needs from an evaluation backend, and nothing
+more: ``submit_async`` / ``probe`` / ``stats`` / ``state_dict`` /
+``load_state_dict`` / ``close``.  ``EvalPool`` is the reference
+implementation; anything satisfying the protocol (a remote queue client, a
+recorded-fixture backend) plugs into ``KernelScientist(backend=...)``
+unchanged.
 
-* ``EvalCache`` sits in front of the pool: a content-addressed result store
-  keyed by ``sha256(source)``.  Duplicate submissions — identical fallback
-  kernels, resubmissions after a resume, repeated genomes across
-  generations — return the persisted ``EvalResult`` without consuming a
-  platform slot.  Hits and misses stream to ``events.jsonl``.
+``EvalPool`` — N sequential-only workers behind one priority queue
+------------------------------------------------------------------
+Each worker still processes submissions strictly sequentially (the "good
+citizen" rule of §3.4 — a busy service raises ``ServiceBusyError``); the
+pool is what scales, by routing queued submissions to whichever worker is
+free.  Three priority tiers: ``PRIORITY_URGENT`` (jump the queue — e.g. a
+re-evaluation the drain is blocked on) < ``PRIORITY_CAMPAIGN`` (generation
+submissions) < ``PRIORITY_PROBE`` (idle-time autotune/benchmark probes).
+``pause()`` stops workers from starting *new* jobs (in-flight evaluations
+finish; the queue keeps accepting); ``resume()`` continues.
 
-Determinism contract (load-bearing — resume and N-worker equivalence both
-depend on it):
+Transport matrix (see ``core.transport``)
+-----------------------------------------
+=============  =====================  ======================================
+transport      worker                 failure domain
+=============  =====================  ======================================
+``inprocess``  service object called  none: a crash in any evaluation kills
+               from a pool thread     the campaign process
+``subprocess`` ``eval_worker`` child  one worker: death/stall is detected
+               process, JSONL wire    (heartbeat + deadlines), the in-flight
+               protocol               job is requeued at its original
+                                      priority, the worker respawns lazily
+                                      with a stepped incarnation
+=============  =====================  ======================================
 
-1. **Cache key = jitter key = sha256(source).**  The evaluation platform's
-   benchmark jitter is keyed on the submission's content address, *not* on
-   a global submission counter: a concurrent pool has no stable submission
-   ordering, so any order-dependent randomness would make the campaign
-   trajectory depend on thread scheduling.  Content keying makes an
-   ``EvalResult`` a pure function of (platform seed, source, config) —
-   which is exactly the property that makes the result cacheable and makes
-   a ``workers=N`` campaign population-identical to the ``workers=1`` run.
-2. **Pool workers clone the service seed.**  ``EvalPool.of`` builds extra
-   workers with ``service.clone()``; for ``EvaluationService`` the clone
-   keeps the same timing seed, so worker assignment never changes timings.
-   (Fault-injection wrappers clone with a stepped fault seed instead —
-   faults are per-route, results are per-platform.)
-3. **Results are applied in submission order.**  The pool completes jobs in
-   any order; callers that need a deterministic trajectory (the scientist's
-   generation drain) apply results sorted by record id, and persist
-   pending/completed state after every application so a killed campaign
-   resumes mid-drain, trajectory-identically.
+``EvalCache`` — content-addressed verdict store
+-----------------------------------------------
+Keyed by ``sha256(source)``, in front of the pool: duplicate submissions —
+identical fallback kernels, resubmissions after a resume, repeated genomes
+— return the persisted ``EvalResult`` without consuming a platform slot.
+With ``max_entries`` set it is a size-capped LRU: ``get`` refreshes
+recency, overflow evicts the least recently used, and the append-only
+``eval_cache.jsonl`` is compacted (atomic rewrite of live entries) once
+dead lines outnumber the cap.  Hits/misses/evictions stream to
+``events.jsonl``.
 
-The cache persists as append-only JSONL (``eval_cache.jsonl`` in the
-campaign workdir): each completed evaluation appends one line at completion
-time, independent of the scientist's state persistence, so a result that
-was computed but whose campaign state never landed still saves a platform
-slot after resume.  Only platform *verdicts* are cached (ok /
-compile_error / runtime_error / incorrect); submissions that failed at the
-queue level ("failed") never produced a verdict and are always retried.
+Cross-transport determinism contract (load-bearing)
+---------------------------------------------------
+1. **Cache key = jitter key = sha256(source).**  Benchmark jitter keys on
+   the submission's content address, never on submission order: an
+   ``EvalResult`` is a pure function of (platform seed, source, config).
+   This single invariant is what makes verdicts cacheable, makes
+   ``workers=N`` population-identical to ``workers=1``, and makes a
+   subprocess campaign with worker kills population-identical to an
+   uninterrupted in-process run — a requeued job re-evaluates to the same
+   verdict wherever and whenever it lands.
+2. **Workers clone the platform seed.**  ``EvalPool.of`` builds extra
+   workers with ``service.clone()`` (same timing seed; fault-injection
+   wrappers step their *fault* seed instead), and ``SubprocessTransport``
+   rebuilds children from ``service_spec()`` with the same seeds, so
+   worker assignment and respawns never change timings.
+3. **Results are applied in record-id order.**  The pool completes jobs in
+   any order; the scientist's drain applies them sorted by record id and
+   persists pending/completed state after every application, so
+   kill-and-resume stays trajectory-identical across transports.
+
+Only platform *verdicts* are cached (ok / compile_error / runtime_error /
+incorrect); submissions that failed at the queue level ("failed") never
+produced a verdict and are always retried.
 """
 from __future__ import annotations
 
+import collections
 import hashlib
 import itertools
 import json
@@ -58,29 +86,65 @@ import pathlib
 import queue
 import threading
 import time
-from typing import Optional
+from typing import Optional, Protocol, runtime_checkable
 
 from . import resilience
 from .evaluator import EvalResult
+from .transport import WorkerDiedError, WorkerTransport, make_transport
 
 #: Queue priorities (lower value = served first).
-PRIORITY_CAMPAIGN = 0
-PRIORITY_PROBE = 10
+PRIORITY_URGENT = -10            # jump the queue: drain-blocking work
+PRIORITY_CAMPAIGN = 0            # generation submissions
+PRIORITY_PROBE = 10              # idle-time autotune/benchmark probes
 _PRIORITY_SHUTDOWN = 10 ** 9     # sentinels drain after all real work
+
+
+@runtime_checkable
+class EvalBackend(Protocol):
+    """What ``KernelScientist`` requires of an evaluation backend.
+
+    ``EvalPool`` implements it; so can a remote evaluation-queue client or
+    a test double.  The contract: ``submit_async`` returns an
+    :class:`EvalHandle`-like future immediately; ``probe`` is the
+    low-priority lane; ``state_dict``/``load_state_dict`` carry whatever
+    must survive a campaign restart; ``close`` quiesces workers."""
+
+    def submit_async(self, source: str, priority: int = PRIORITY_CAMPAIGN,
+                     tag=None) -> "EvalHandle": ...
+    def probe(self, source: str, tag=None) -> "EvalHandle": ...
+    def stats(self) -> dict: ...
+    def state_dict(self) -> dict: ...
+    def load_state_dict(self, d) -> None: ...
+    def close(self, wait: bool = True) -> None: ...
 
 
 class EvalCache:
     """Content-addressed ``EvalResult`` store keyed by ``sha256(source)``.
 
-    In-memory by default; given a path, every ``put`` appends one JSONL line
-    so a resumed campaign reloads all previously-computed verdicts.  Torn
-    tail lines (crash mid-append) are skipped on load."""
+    In-memory by default; given a path, every ``put`` appends one JSONL
+    line so a resumed campaign reloads all previously-computed verdicts
+    (torn tail lines from a crash mid-append are skipped; later lines win
+    over earlier ones for the same key).
 
-    def __init__(self, path=None) -> None:
+    With ``max_entries`` set the cache is a bounded LRU: ``get`` refreshes
+    an entry's recency, inserting past the cap evicts the least recently
+    used entry, and the JSONL file is compacted in place (atomic tmp +
+    rename of the live entries, in recency order) whenever evicted/dead
+    lines outnumber ``max_entries`` — so a month-long campaign's cache file
+    stays O(max_entries), not O(submissions)."""
+
+    def __init__(self, path=None, max_entries: Optional[int] = None) -> None:
+        if max_entries is not None and max_entries < 1:
+            raise ValueError("max_entries must be >= 1 (or None)")
         self.path = pathlib.Path(path) if path else None
+        self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
-        self._entries: dict[str, EvalResult] = {}
+        self.evictions = 0
+        self.compactions = 0
+        self._lines = 0           # JSONL lines currently in the file
+        self._entries: collections.OrderedDict[str, EvalResult] = \
+            collections.OrderedDict()
         self._lock = threading.Lock()
         if self.path and self.path.exists():
             for line in self.path.read_text().splitlines():
@@ -89,11 +153,17 @@ class EvalCache:
                     continue
                 try:
                     d = json.loads(line)
-                    self._entries[d["key"]] = EvalResult(
-                        d["status"], d.get("error", ""),
-                        d.get("timings_us", {}))
+                    res = EvalResult(d["status"], d.get("error", ""),
+                                     d.get("timings_us", {}))
                 except (json.JSONDecodeError, KeyError):
                     continue
+                self._lines += 1
+                self._entries[d["key"]] = res
+                self._entries.move_to_end(d["key"])
+            # reload trims to the cap by file order (append order ~ recency)
+            if self.max_entries is not None:
+                while len(self._entries) > self.max_entries:
+                    self._entries.popitem(last=False)
         elif self.path:
             self.path.parent.mkdir(parents=True, exist_ok=True)
 
@@ -105,30 +175,67 @@ class EvalCache:
         return len(self._entries)
 
     def get(self, key: str) -> Optional[EvalResult]:
-        """Lookup with hit/miss accounting (one call per submission)."""
+        """Lookup with hit/miss accounting (one call per submission); a hit
+        refreshes the entry's LRU recency."""
         with self._lock:
             res = self._entries.get(key)
             if res is None:
                 self.misses += 1
             else:
                 self.hits += 1
+                self._entries.move_to_end(key)
             return res
 
     def put(self, key: str, result: EvalResult) -> None:
         with self._lock:
             if key in self._entries:
+                self._entries.move_to_end(key)
                 return
             self._entries[key] = result
             if self.path:
                 with open(self.path, "a") as f:
-                    f.write(json.dumps(
-                        {"key": key, "status": result.status,
-                         "error": result.error,
-                         "timings_us": result.timings_us}) + "\n")
+                    f.write(self._line(key, result))
+                self._lines += 1
+            if self.max_entries is not None:
+                while len(self._entries) > self.max_entries:
+                    self._entries.popitem(last=False)
+                    self.evictions += 1
+                if (self.path
+                        and self._lines - len(self._entries)
+                        > self.max_entries):
+                    self._compact()
+
+    @staticmethod
+    def _line(key: str, result: EvalResult) -> str:
+        return json.dumps({"key": key, "status": result.status,
+                           "error": result.error,
+                           "timings_us": result.timings_us}) + "\n"
+
+    def _compact(self) -> None:
+        """Rewrite the JSONL file to just the live entries (LRU order, so a
+        reload reconstructs recency).  Atomic: tmp + rename.  Caller holds
+        the lock."""
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text("".join(self._line(k, r)
+                               for k, r in self._entries.items()))
+        tmp.replace(self.path)
+        self._lines = len(self._entries)
+        self.compactions += 1
+
+    def compact(self) -> None:
+        """Force a compaction (e.g. at campaign end)."""
+        with self._lock:
+            if self.path:
+                self._compact()
 
     def stats(self) -> dict:
-        return {"entries": len(self._entries), "hits": self.hits,
-                "misses": self.misses}
+        d = {"entries": len(self._entries), "hits": self.hits,
+             "misses": self.misses}
+        if self.max_entries is not None:
+            d.update(max_entries=self.max_entries,
+                     evictions=self.evictions,
+                     compactions=self.compactions)
+        return d
 
 
 class EvalHandle:
@@ -137,7 +244,8 @@ class EvalHandle:
     ``result()`` blocks until the evaluation completes and returns the
     ``EvalResult`` — or re-raises whatever the worker raised (including
     ``BaseException`` such as ``KeyboardInterrupt``, so a killed campaign
-    still unwinds through the drain loop)."""
+    still unwinds through the drain loop).  ``requeues`` counts how many
+    times the job was re-enqueued after a worker death."""
 
     def __init__(self, key: str, tag=None) -> None:
         self.key = key
@@ -145,6 +253,7 @@ class EvalHandle:
         self.cached = False
         self.worker: Optional[int] = None
         self.duration_s = 0.0
+        self.requeues = 0
         self._event = threading.Event()
         self._result: Optional[EvalResult] = None
         self._exc: Optional[BaseException] = None
@@ -165,33 +274,45 @@ class EvalHandle:
 
 
 class EvalPool:
-    """N sequential-only evaluation services behind one priority queue.
+    """N sequential-only evaluation workers behind one priority queue —
+    the reference :class:`EvalBackend`.
 
-    Worker threads are bound 1:1 to services, spawn on demand, and exit
-    after a short idle period (no resource leak across many short-lived
-    pools).  A submission whose service turns out busy (external
-    contention) raises ``ServiceBusyError``, which the retry policy treats
-    as immediately-reroutable — retried with zero backoff — rather than as
-    a platform fault worth exponential delay."""
+    Worker threads are bound 1:1 to transport worker indices, spawn on
+    demand, and exit after a short idle period (no resource leak across
+    many short-lived pools).  A submission whose service turns out busy
+    raises ``ServiceBusyError``, retried with zero backoff; a submission
+    whose *worker dies* (subprocess transport) is requeued at its original
+    priority — up to ``max_requeues`` times — and the worker respawns."""
 
-    def __init__(self, services, cache: Optional[EvalCache] = None,
+    def __init__(self, services=None, cache: Optional[EvalCache] = None,
                  retry_policy: Optional[resilience.RetryPolicy] = None,
                  events=None, sleep=time.sleep,
-                 idle_timeout_s: float = 0.5) -> None:
-        services = list(services)
-        if not services:
-            raise ValueError("EvalPool needs at least one service")
+                 idle_timeout_s: float = 0.5,
+                 transport="inprocess",
+                 transport_options: Optional[dict] = None,
+                 max_requeues: int = 32) -> None:
+        services = list(services) if services is not None else []
+        if not services and not isinstance(transport, WorkerTransport):
+            raise ValueError("EvalPool needs at least one service "
+                             "(or a constructed transport)")
         self.services = services
         self.cache = cache
         self.retry_policy = retry_policy or resilience.DEFAULT_POLICY
         self.events = events
         self._sleep = sleep
         self._idle_s = idle_timeout_s
+        self.max_requeues = max_requeues
+        self.transport = make_transport(transport, services,
+                                        retry_policy=self.retry_policy,
+                                        options=transport_options)
+        self.transport.emitter = self._emit
         self._queue: queue.PriorityQueue = queue.PriorityQueue()
         self._threads: dict[int, threading.Thread] = {}
         self._lock = threading.Lock()
         self._seq = itertools.count()
         self._closed = False
+        self._unpaused = threading.Event()
+        self._unpaused.set()
 
     # ----------------------------------------------------------- construct
     @classmethod
@@ -233,29 +354,60 @@ class EvalPool:
         reaches a worker when no campaign submission is queued."""
         return self.submit_async(source, priority=PRIORITY_PROBE, tag=tag)
 
+    def urgent(self, source: str, tag=None) -> EvalHandle:
+        """Queue-jumping tier for drain-blocking work (e.g. re-evaluating
+        the one kernel the scientist cannot advance without)."""
+        return self.submit_async(source, priority=PRIORITY_URGENT, tag=tag)
+
+    # -------------------------------------------------------- pause/resume
+    def pause(self) -> None:
+        """Stop workers from *starting* new jobs.  In-flight evaluations
+        finish; the queue keeps accepting submissions; ``close()`` on a
+        paused pool unpauses it so queued work drains."""
+        if self._unpaused.is_set():
+            self._unpaused.clear()
+            self._emit("pool_pause", queued=self._queue.qsize())
+
+    def resume(self) -> None:
+        if not self._unpaused.is_set():
+            self._unpaused.set()
+            self._emit("pool_resume", queued=self._queue.qsize())
+            self._ensure_workers()
+
+    @property
+    def paused(self) -> bool:
+        return not self._unpaused.is_set()
+
+    # ---------------------------------------------------------- accounting
     @property
     def submissions(self) -> int:
         """Total platform slots consumed across all workers."""
-        return sum(getattr(s, "submissions", 0) for s in self.services)
+        return self.transport.submissions
 
     def stats(self) -> dict:
-        d = {"workers": len(self.services), "submissions": self.submissions}
+        d = {"workers": self.transport.num_workers,
+             "submissions": self.submissions,
+             "transport": self.transport.kind,
+             "paused": self.paused}
         if self.cache is not None:
             d.update({f"cache_{k}": v for k, v in self.cache.stats().items()})
         return d
 
     def close(self, wait: bool = True) -> None:
-        """Stop accepting work; sentinels drain after already-queued jobs."""
+        """Stop accepting work; sentinels drain after already-queued jobs.
+        A paused pool is unpaused first so nothing queued is stranded."""
         with self._lock:
             if self._closed:
                 return
             self._closed = True
             threads = list(self._threads.values())
+        self._unpaused.set()
         for _ in threads:
             self._queue.put((_PRIORITY_SHUTDOWN, next(self._seq), None, None))
         if wait:
             for t in threads:
                 t.join()
+        self.transport.close()
 
     def __enter__(self) -> "EvalPool":
         return self
@@ -265,18 +417,14 @@ class EvalPool:
 
     # ------------------------------------------------- resumable campaigns
     def state_dict(self) -> dict:
-        return {"workers": [
-            (s.state_dict() if hasattr(s, "state_dict") else None)
-            for s in self.services]}
+        return {"workers": self.transport.worker_states()}
 
     def load_state_dict(self, d) -> None:
         if not d:
             return
         # pre-pool state.json persisted one bare service's state dict
         worker_states = d["workers"] if "workers" in d else [d]
-        for svc, sd in zip(self.services, worker_states):
-            if sd is not None and hasattr(svc, "load_state_dict"):
-                svc.load_state_dict(sd)
+        self.transport.load_worker_states(worker_states)
 
     # ------------------------------------------------------------ internals
     def _emit(self, event: str, **fields) -> None:
@@ -287,7 +435,7 @@ class EvalPool:
         with self._lock:
             if self._closed:
                 return
-            for idx in range(len(self.services)):
+            for idx in range(self.transport.num_workers):
                 t = self._threads.get(idx)
                 if t is None or not t.is_alive():
                     t = threading.Thread(target=self._worker, args=(idx,),
@@ -296,10 +444,14 @@ class EvalPool:
                     t.start()
 
     def _worker(self, idx: int) -> None:
-        svc = self.services[idx]
         while True:
+            if not self._unpaused.is_set():
+                # paused: never pop (or idle-exit past) queued work
+                self._unpaused.wait(self._idle_s)
+                continue
             try:
-                _, _, source, handle = self._queue.get(timeout=self._idle_s)
+                prio, _, source, handle = self._queue.get(
+                    timeout=self._idle_s)
             except queue.Empty:
                 with self._lock:
                     # exit only while provably idle: a job enqueued before
@@ -315,9 +467,10 @@ class EvalPool:
                     if self._threads.get(idx) is threading.current_thread():
                         del self._threads[idx]
                 return
-            self._run_job(svc, idx, source, handle)
+            self._run_job(idx, source, handle, prio)
 
-    def _run_job(self, svc, idx: int, source: str, handle: EvalHandle) -> None:
+    def _run_job(self, idx: int, source: str, handle: EvalHandle,
+                 priority: int = PRIORITY_CAMPAIGN) -> None:
         t0 = time.perf_counter()
         handle.worker = idx
         try:
@@ -341,12 +494,26 @@ class EvalPool:
                            delay_s=round(delay, 3))
 
             res = resilience.retry_call(
-                lambda: svc.submit(source), policy=self.retry_policy,
-                on_retry=on_retry, sleep=self._sleep)
+                lambda: self.transport.run(idx, source),
+                policy=self.retry_policy, on_retry=on_retry,
+                sleep=self._sleep)
             if self.cache is not None:
                 self.cache.put(handle.key, res)
             handle.duration_s = time.perf_counter() - t0
             handle._finish(result=res)
+        except WorkerDiedError as e:
+            # the worker died or stalled with this job in flight: requeue at
+            # the original priority — any (respawned) worker re-evaluates to
+            # the identical verdict, so the campaign trajectory is unchanged
+            handle.requeues += 1
+            self._emit("worker_requeue", worker=idx, tag=handle.tag,
+                       requeues=handle.requeues, reason=str(e))
+            if handle.requeues > self.max_requeues:
+                handle.duration_s = time.perf_counter() - t0
+                handle._finish(exc=RuntimeError(
+                    f"gave up after {handle.requeues} worker deaths: {e}"))
+            else:
+                self._queue.put((priority, next(self._seq), source, handle))
         except BaseException as e:
             # Exceptions (retries exhausted) become the caller's "failed"
             # verdict; BaseExceptions (KeyboardInterrupt) surface at drain

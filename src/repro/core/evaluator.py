@@ -174,6 +174,18 @@ class EvaluationService:
             correctness_config=self.correctness_config, noise=self.noise,
             seed=self.seed, rtol=self.rtol, latency_s=self.latency_s)
 
+    def service_spec(self) -> dict:
+        """JSON-serializable constructor spec, so a subprocess worker
+        (``core.eval_worker``) rebuilds an identically-seeded service.  The
+        timing seed travels with the spec, so a respawned worker reports
+        exactly the timings its predecessor would have (content-keyed
+        jitter makes the verdict a pure function of the spec + source)."""
+        return {"kind": "evaluation", "backend": self.backend,
+                "bench_configs": [list(c) for c in self.bench_configs],
+                "correctness_config": list(self.correctness_config),
+                "noise": self.noise, "seed": self.seed, "rtol": self.rtol,
+                "latency_s": self.latency_s}
+
     # ------------------------------------------------- resumable campaigns
     def state_dict(self) -> dict:
         """Counters to persist across a campaign restart.  Since benchmark

@@ -11,6 +11,12 @@ latencies).
 
 Events are *observational*: nothing in the loop reads them back, so wall
 timestamps here never affect resume determinism.
+
+Worker lifecycle events (``WORKER_LIFECYCLE_EVENTS``) chronicle the
+distributed evaluation layer: spawns/exits/deaths of transport workers,
+requeues of in-flight jobs after a death, and pool pause/resume — the
+observables a campaign operator greps first when a multi-day run slows
+down.  ``worker_lifecycle()`` filters them per worker index.
 """
 from __future__ import annotations
 
@@ -19,6 +25,10 @@ import pathlib
 import threading
 import time
 from typing import Optional
+
+#: Events emitted by the evalpool/transport layer about worker health.
+WORKER_LIFECYCLE_EVENTS = ("worker_spawn", "worker_exit", "worker_died",
+                           "worker_requeue", "pool_pause", "pool_resume")
 
 
 class EventLog:
@@ -62,6 +72,15 @@ class EventLog:
     def select(self, event: str, **where) -> list[dict]:
         return [r for r in self.records if r["event"] == event
                 and all(r.get(k) == v for k, v in where.items())]
+
+    def worker_lifecycle(self, worker: Optional[int] = None) -> list[dict]:
+        """The worker-health substream (spawns, deaths, requeues,
+        pause/resume), optionally filtered to one worker index."""
+        out = [r for r in self.records
+               if r["event"] in WORKER_LIFECYCLE_EVENTS]
+        if worker is not None:
+            out = [r for r in out if r.get("worker") == worker]
+        return out
 
     def stage_durations(self) -> dict:
         """stage name -> list of duration_s from stage_end events."""

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 import time
 from typing import Callable, Optional
 
@@ -263,7 +264,62 @@ class FlakyService:
                             error_rate=self.error_rate,
                             timeout_rate=self.timeout_rate)
 
+    def service_spec(self) -> dict:
+        """JSON spec so a subprocess worker rebuilds this wrapper stack
+        (``eval_worker.build_service``) with identical seeds and rates."""
+        from .transport import service_spec_of
+        return {"kind": "flaky", "inner": service_spec_of(self.inner),
+                "seed": self.seed, "error_rate": self.error_rate,
+                "timeout_rate": self.timeout_rate}
+
     def __getattr__(self, name):
         # delegate everything else (submissions, bench_configs, ...) so the
         # wrapper is a drop-in EvaluationService
+        return getattr(self.inner, name)
+
+
+class CrashService:
+    """Wrap an ``EvaluationService`` and deterministically *kill the whole
+    worker process* mid-benchmark — the fault class that distinguishes a
+    distributed campaign from a threaded one: a segfaulting kernel, an OOM
+    kill, a preempted host.
+
+    ``os._exit`` (no cleanup, no Python unwinding) models a hard death; the
+    draw is keyed on ``(seed, incarnation, call_index)``, so a respawned
+    worker (stepped incarnation — ``SubprocessTransport`` passes it through
+    ``eval_worker.build_service``) faces a fresh fault stream and the
+    resubmitted job eventually passes rather than crash-looping at the same
+    call forever.  Only meaningful inside a subprocess worker: in-process it
+    would take the campaign (or the test runner) down with it, which is
+    exactly the failure mode the subprocess transport exists to contain.
+    """
+
+    def __init__(self, inner, seed: int = 0, crash_rate: float = 0.1,
+                 incarnation: int = 0):
+        if not 0.0 <= crash_rate <= 1.0:
+            raise ValueError("crash_rate must be in [0, 1]")
+        self.inner = inner
+        self.seed = seed
+        self.crash_rate = crash_rate
+        self.incarnation = incarnation
+        self.calls = 0
+
+    def submit(self, source: str):
+        self.calls += 1
+        u = _uniform01(self.seed, "kill", self.incarnation, self.calls)
+        if u < self.crash_rate:
+            os._exit(17)          # hard worker death, mid-benchmark
+        return self.inner.submit(source)
+
+    def clone(self) -> "CrashService":
+        return CrashService(self.inner.clone(), seed=self.seed + 1,
+                            crash_rate=self.crash_rate,
+                            incarnation=self.incarnation)
+
+    def service_spec(self) -> dict:
+        from .transport import service_spec_of
+        return {"kind": "crash", "inner": service_spec_of(self.inner),
+                "seed": self.seed, "crash_rate": self.crash_rate}
+
+    def __getattr__(self, name):
         return getattr(self.inner, name)

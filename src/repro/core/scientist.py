@@ -26,7 +26,9 @@ campaigns against a flaky shared evaluation queue (§3.4):
   aborting the generation.
 * **Event log.**  Stage timings, retries, fallbacks, and evaluation outcomes
   stream to ``events.jsonl`` (``core.events``) for the §4.4 figure.
-* **Pooled evaluation.**  Submissions go through ``core.evalpool.EvalPool``:
+* **Pooled evaluation.**  Submissions go through the ``EvalBackend``
+  protocol (``core.evalpool``) — by default an ``EvalPool`` of in-process
+  or subprocess workers (``KernelScientist(backend=...)``):
   each writer output is enqueued as soon as it exists, so the writer stage
   overlaps with in-flight evaluations and a generation costs roughly
   ``max(writes) + max(evals)`` instead of ``3 x (write + eval)``.  Results
@@ -44,15 +46,20 @@ import dataclasses
 import json
 import pathlib
 import time
+import warnings
 from typing import Optional
 
 from . import codegen, designer, prompts, resilience, selector, writer
-from .evalpool import EvalCache, EvalPool
+from .evalpool import EvalBackend, EvalCache, EvalPool
 from .events import EventLog
 from .evaluator import EvaluationService, EvalResult
 from .genome import SEED_LIBRARY, SEED_MXU, SEED_NAIVE, KernelGenome
 from .llm import LLMClient, ScriptedLLM
 from .population import KernelRecord, Population
+
+#: Sentinel distinguishing "not passed" from an explicit None for the
+#: deprecated constructor kwargs.
+_UNSET = object()
 
 # v2: "service" holds EvalPool worker states; inflight gained "pending"
 # (enqueued-but-unfinished record ids).  v1 files load fine: a bare service
@@ -92,15 +99,29 @@ class GenerationLog:
 
 class KernelScientist:
     def __init__(self, llm: Optional[LLMClient] = None,
-                 service: Optional[EvaluationService] = None,
+                 backend=None,
                  task_text: str = prompts.TASK_TEXT,
                  workdir: Optional[str] = None,
                  retry_policy: Optional[resilience.RetryPolicy] = None,
                  events: Optional[EventLog] = None,
                  sleep=time.sleep,
-                 pool: Optional[EvalPool] = None,
-                 workers: int = 1,
-                 eval_cache: bool = True) -> None:
+                 service=_UNSET,
+                 pool=_UNSET,
+                 workers=_UNSET,
+                 eval_cache=_UNSET) -> None:
+        """``backend`` is the single evaluation parameter: either anything
+        satisfying the :class:`EvalBackend` protocol (an ``EvalPool``, a
+        remote-queue client, a test double) used as-is, or a bare
+        ``EvaluationService``-like object (has ``submit``) that is wrapped
+        in a one-worker cached ``EvalPool``.  ``None`` wraps a default
+        ``EvaluationService()``.
+
+        ``service=`` / ``pool=`` / ``workers=`` / ``eval_cache=`` are
+        deprecated shims for the pre-``EvalBackend`` surface: they still
+        behave exactly as before but emit ``DeprecationWarning``; construct
+        the pool explicitly instead —
+        ``backend=EvalPool.of(svc, workers=3, cache=EvalCache(path))``.
+        """
         self.llm = llm or ScriptedLLM()
         self.task_text = task_text
         self.population = Population()
@@ -114,48 +135,110 @@ class KernelScientist:
             self.workdir.mkdir(parents=True, exist_ok=True)
         self.events = events or EventLog(
             self.workdir / "events.jsonl" if self.workdir else None)
-        if pool is None:
-            cache = None
-            if eval_cache:
-                cache = EvalCache(self.workdir / "eval_cache.jsonl"
-                                  if self.workdir else None)
-            pool = EvalPool.of(service or EvaluationService(),
-                               workers=workers, cache=cache,
+        self.pool: EvalBackend = self._resolve_backend(
+            backend, service=service, pool=pool, workers=workers,
+            eval_cache=eval_cache)
+
+    def _default_cache(self) -> EvalCache:
+        """The cache __init__ semantics attach to a pool it builds itself:
+        persisted in the workdir when there is one, in-memory otherwise."""
+        return EvalCache(self.workdir / "eval_cache.jsonl"
+                         if self.workdir else None)
+
+    def _resolve_backend(self, backend, service, pool, workers,
+                         eval_cache) -> EvalBackend:
+        legacy = {k: v for k, v in dict(service=service, pool=pool,
+                                        workers=workers,
+                                        eval_cache=eval_cache).items()
+                  if v is not _UNSET}
+        if legacy and backend is not None:
+            raise TypeError(
+                f"pass either backend= or the deprecated kwargs "
+                f"({', '.join(sorted(legacy))}), not both")
+        if legacy:
+            warnings.warn(
+                f"KernelScientist({', '.join(k + '=' for k in sorted(legacy))}"
+                f") is deprecated; pass a single backend= (an EvalBackend, "
+                f"or an EvaluationService to wrap — e.g. "
+                f"backend=EvalPool.of(service, workers=N, cache=...))",
+                DeprecationWarning, stacklevel=3)
+            pool = legacy.get("pool")
+            if pool is None:
+                cache = (self._default_cache()
+                         if legacy.get("eval_cache", True) else None)
+                pool = EvalPool.of(legacy.get("service")
+                                   or EvaluationService(),
+                                   workers=legacy.get("workers", 1),
+                                   cache=cache,
+                                   retry_policy=self.retry_policy,
+                                   events=self.events, sleep=self._sleep)
+            elif pool.events is None:
+                pool.events = self.events
+            return pool
+        if backend is None:
+            backend = EvaluationService()
+        if isinstance(backend, EvalBackend):
+            if getattr(backend, "events", _UNSET) is None:
+                backend.events = self.events
+            return backend
+        if hasattr(backend, "submit"):
+            return EvalPool.of(backend, workers=1,
+                               cache=self._default_cache(),
                                retry_policy=self.retry_policy,
-                               events=self.events, sleep=sleep)
-        elif pool.events is None:
-            pool.events = self.events
-        self.pool = pool
+                               events=self.events, sleep=self._sleep)
+        raise TypeError(
+            f"backend must satisfy the EvalBackend protocol or be an "
+            f"EvaluationService-like object with submit(); got "
+            f"{type(backend).__name__}")
 
     # The first pool worker doubles as the legacy single-service view;
-    # assigning a new service rebuilds the pool around it (same cache,
-    # policy, and worker count — dropping to one worker if it can't clone).
+    # assigning a new service rebuilds the pool around it, preserving the
+    # existing cache *instance* (a custom cache path survives even without
+    # a workdir), retry policy, events, sleep, and worker count — dropping
+    # to one worker if the new service can't clone.
     @property
     def service(self):
         return self.pool.services[0]
 
     @service.setter
     def service(self, svc) -> None:
-        workers = (len(self.pool.services) if hasattr(svc, "clone") else 1)
-        self.pool = EvalPool.of(svc, workers=workers, cache=self.pool.cache,
-                                retry_policy=self.pool.retry_policy,
-                                events=self.pool.events,
-                                sleep=self.pool._sleep)
+        old = self.pool
+        cache = getattr(old, "cache", None)
+        if cache is None and not isinstance(old, EvalPool):
+            # rebuilding around a foreign backend with no cache of its own:
+            # fall back to the same default __init__ would attach
+            cache = self._default_cache()
+        n_workers = len(getattr(old, "services", ())) or 1
+        workers = n_workers if hasattr(svc, "clone") else 1
+        transport = getattr(getattr(old, "transport", None), "kind",
+                            "inprocess")
+        self.pool = EvalPool.of(
+            svc, workers=workers, cache=cache,
+            retry_policy=getattr(old, "retry_policy", self.retry_policy),
+            events=getattr(old, "events", None) or self.events,
+            sleep=getattr(old, "_sleep", self._sleep),
+            transport=transport)
+        if isinstance(old, EvalPool):
+            old.close(wait=False)
 
     # ------------------------------------------------------------- resume
     @classmethod
     def resume(cls, workdir, llm: Optional[LLMClient] = None,
-               service: Optional[EvaluationService] = None,
+               backend=None, service=_UNSET,
                **kwargs) -> "KernelScientist":
         """Reconstruct a campaign from its workdir and continue it.
 
-        Pass ``llm`` / ``service`` instances constructed exactly as in the
+        Pass ``llm`` / ``backend`` instances constructed exactly as in the
         original run (same seeds and noise); their internal decision state is
         fast-forwarded from ``state.json`` so the continued campaign makes
         the same choices an uninterrupted run would have made.  If the last
         persisted state holds a partially-completed generation, the next
         :meth:`run` finishes it first — only the kernel that was in flight
         at the moment of the crash is re-generated and re-submitted.
+
+        ``service=`` (and ``workers=`` / ``eval_cache=`` via ``kwargs``) are
+        the deprecated pre-``EvalBackend`` spellings; ``__init__`` shims
+        them with a ``DeprecationWarning``.
         """
         workdir = pathlib.Path(workdir)
         state_path = workdir / "state.json"
@@ -163,7 +246,9 @@ class KernelScientist:
             raise FileNotFoundError(
                 f"no resumable campaign in {workdir} (state.json missing)")
         state = json.loads(state_path.read_text())
-        sci = cls(llm=llm, service=service, workdir=workdir, **kwargs)
+        if service is not _UNSET:
+            kwargs["service"] = service
+        sci = cls(llm=llm, backend=backend, workdir=workdir, **kwargs)
         if not state.get("seeded"):
             # crashed mid-seed: cheapest correct recovery is a fresh start
             sci.events.emit("resume", mode="restart_unseeded")
