@@ -1,0 +1,59 @@
+"""CI guard: fail when campaign throughput regresses past a threshold.
+
+Re-runs the ``scientist_throughput`` benchmark fresh and compares
+``workers=3`` ``submissions_per_hour`` against the committed
+``BENCH_scientist.json`` baseline.  The intended catch is integrity-layer
+overhead creep: the verdict-trust machinery (``core.integrity``) is
+default-off, so the audited code path must cost ~nothing when disabled — a
+>15% throughput drop means something started paying per-submission work it
+shouldn't.
+
+The comparison is robust to machine speed because the benchmark's modelled
+queue latency (``latency_s=0.9`` per submission) dominates wall-clock: the
+metric mostly measures scheduling overlap, not CPU.
+
+    PYTHONPATH=src python benchmarks/check_throughput_regression.py
+
+Exits 0 when within threshold, 1 on regression (with both numbers printed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from scientist_throughput import run as run_bench  # noqa: E402
+
+BASELINE = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_scientist.json"
+METRIC = "submissions_per_hour"
+WORKERS = "3"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=str(BASELINE),
+                    help="committed BENCH_scientist.json to compare against")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="maximum tolerated fractional drop (default 0.15)")
+    args = ap.parse_args(argv)
+
+    baseline = json.loads(pathlib.Path(args.baseline).read_text())
+    expected = baseline["workers"][WORKERS][METRIC]
+
+    # fresh run; out_path=None leaves the committed baseline untouched
+    _, bench = run_bench(out_path=None)
+    measured = bench["workers"][WORKERS][METRIC]
+
+    drop = (expected - measured) / expected if expected else 0.0
+    verdict = "REGRESSION" if drop > args.threshold else "ok"
+    print(f"workers={WORKERS} {METRIC}: baseline {expected:.1f}, "
+          f"measured {measured:.1f} "
+          f"({-drop:+.1%} vs baseline, threshold -{args.threshold:.0%}) "
+          f"-> {verdict}")
+    return 1 if verdict == "REGRESSION" else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,12 +21,22 @@ the content-addressed eval cache as an LRU with on-disk compaction;
 ``--no-eval-cache`` disables it entirely.  ``--fault-rate 0.2`` wraps the
 backends in the seeded fault injectors to rehearse the paper's
 flaky-shared-queue regime (§3.4) end to end.
+
+The verdict-trust layer (``core.integrity``) is off by default and enabled
+per component: ``--quorum-k 3`` audits improbable timings with a
+median-of-k re-measure quorum, ``--canary-interval 2`` runs the per-worker
+drift sentinel every 2 generations, ``--quarantine-after 3`` blacklists a
+kernel's content hash after it kills 3 workers, and
+``--budget-submissions N`` stops the campaign cleanly at a submission
+budget.  The configuration and all integrity state persist in the
+campaign's ``state.json``, so a resumed run continues audits, quarantines,
+and budgets where the killed one left off.
 """
 import argparse
 import pathlib
 
 from repro.core import (CrashService, EvalCache, EvalPool, EvaluationService,
-                        FlakyLLM, FlakyService, KernelScientist,
+                        FlakyLLM, FlakyService, Integrity, KernelScientist,
                         NO_WAIT_POLICY, ScriptedLLM)
 
 ap = argparse.ArgumentParser()
@@ -53,6 +63,18 @@ ap.add_argument("--cache-max-entries", type=int, default=None,
                 help="LRU cap for the eval cache (default: unbounded)")
 ap.add_argument("--no-eval-cache", action="store_true",
                 help="disable the content-addressed eval result cache")
+ap.add_argument("--quorum-k", type=int, default=0,
+                help="timing-audit quorum size: flagged verdicts are "
+                     "re-measured k times and median-merged (0 = off)")
+ap.add_argument("--canary-interval", type=int, default=0,
+                help="run the per-worker drift sentinel every N "
+                     "generations (0 = off)")
+ap.add_argument("--quarantine-after", type=int, default=0,
+                help="blacklist a kernel's content hash after it kills "
+                     "this many workers (0 = off)")
+ap.add_argument("--budget-submissions", type=int, default=None,
+                help="stop the campaign at a generation boundary once "
+                     "this many platform submissions are consumed")
 args = ap.parse_args()
 
 if args.kill_rate and args.transport != "subprocess":
@@ -77,9 +99,18 @@ cache = (None if args.no_eval_cache else
 backend = EvalPool.of(service, workers=args.workers, cache=cache,
                       retry_policy=NO_WAIT_POLICY,
                       transport=args.transport)
+# all-defaults Integrity() = every component off = previous behaviour;
+# resume() needs the same configuration the original run had (the live
+# state — quarantine set, breaker states, canary reference, audit ledger,
+# consumed wall-clock — is restored from state.json)
+integrity = Integrity(quorum_k=args.quorum_k,
+                      canary_interval=args.canary_interval,
+                      quarantine_after=args.quarantine_after,
+                      budget_submissions=args.budget_submissions)
 if args.resume:
     sci = KernelScientist.resume(args.workdir, llm=llm, backend=backend,
-                                 retry_policy=NO_WAIT_POLICY)
+                                 retry_policy=NO_WAIT_POLICY,
+                                 integrity=integrity)
     print(f"resumed: {len(sci.logbook)} generations, "
           f"{len(sci.population)} kernels already on disk")
     # --generations is the campaign total; run() counts *additional*
@@ -87,7 +118,7 @@ if args.resume:
     todo = max(0, args.generations - len(sci.logbook))
 else:
     sci = KernelScientist(llm=llm, backend=backend, workdir=args.workdir,
-                          retry_policy=NO_WAIT_POLICY)
+                          retry_policy=NO_WAIT_POLICY, integrity=integrity)
     todo = args.generations
 best = sci.run(generations=todo)
 
@@ -110,3 +141,11 @@ print(f"{stats['submissions']} platform submissions across "
       f"{counts.get('worker_died', 0)} worker deaths / "
       f"{counts.get('worker_requeue', 0)} requeues, "
       f"{counts.get('fallback', 0)} rule-based fallbacks")
+if integrity.enabled:
+    print(f"integrity: {counts.get('audit_flag', 0)} audit flags / "
+          f"{counts.get('audit_quorum', 0)} quorums, "
+          f"{counts.get('quarantine_add', 0)} quarantined / "
+          f"{counts.get('quarantine_block', 0)} blocked, "
+          f"{counts.get('canary', 0)} canaries / "
+          f"{counts.get('worker_drift', 0)} drifts, "
+          f"{counts.get('budget_stop', 0)} budget stops")

@@ -5,7 +5,8 @@ adapted MI300/HIP -> TPU v5e/Pallas (see DESIGN.md §2).
 
 ``__all__`` is the supported public surface: the scientist loop, the
 evaluation backend API (``EvalBackend`` / ``EvalPool`` / transports /
-cache), the resilience toolkit, and the genome/population data model.
+cache), the resilience toolkit, the verdict-trust layer
+(``core.integrity``), and the genome/population data model.
 Anything not listed here is internal and may change without notice.
 """
 from .evalpool import (
@@ -13,17 +14,22 @@ from .evalpool import (
     EvalBackend, EvalCache, EvalHandle, EvalPool,
 )
 from .evaluator import EvalResult, EvaluationService, estimate_us
-from .events import WORKER_LIFECYCLE_EVENTS, EventLog
+from .events import INTEGRITY_EVENTS, WORKER_LIFECYCLE_EVENTS, EventLog
 from .genome import (
     SEED_LIBRARY, SEED_MONOLITH, SEED_MXU, SEED_NAIVE, KernelGenome,
+)
+from .integrity import (
+    CanaryController, HealthMonitor, Integrity, Quarantine, TimingAuditor,
 )
 from .llm import HTTPChatLLM, LLMClient, ScriptedLLM
 from .population import (
     BENCH_CONFIGS_6, BENCH_CONFIGS_18, KernelRecord, Population,
 )
 from .resilience import (
-    DEFAULT_POLICY, NO_WAIT_POLICY, CrashService, FlakyLLM, FlakyService,
-    RetryPolicy, ServiceBusyError, TransientError, retry_call,
+    DEFAULT_POLICY, NO_WAIT_POLICY, CircuitBreaker, CircuitOpenError,
+    CorruptTimingService, CrashService, DriftService, FlakyLLM,
+    FlakyService, PoisonService, RetryPolicy, ServiceBusyError,
+    TransientError, retry_call,
 )
 from .scientist import GenerationLog, KernelScientist
 from .transport import (
@@ -45,9 +51,14 @@ __all__ = [
     # resilience
     "RetryPolicy", "retry_call", "DEFAULT_POLICY", "NO_WAIT_POLICY",
     "TransientError", "ServiceBusyError",
+    "CircuitBreaker", "CircuitOpenError",
     "FlakyLLM", "FlakyService", "CrashService",
+    "CorruptTimingService", "PoisonService", "DriftService",
+    # verdict-trust layer
+    "Integrity", "TimingAuditor", "Quarantine", "CanaryController",
+    "HealthMonitor",
     # events
-    "EventLog", "WORKER_LIFECYCLE_EVENTS",
+    "EventLog", "WORKER_LIFECYCLE_EVENTS", "INTEGRITY_EVENTS",
     # LLM clients
     "LLMClient", "ScriptedLLM", "HTTPChatLLM",
     # data model

@@ -48,10 +48,17 @@ def design(population: Population, basis_id: str, reference_id: str,
 
     avenue_texts = ([a.description for a in knowledge.AVENUES]
                     + list(knowledge.EXTRA_AVENUE_TEXTS))
+    # integrity context: genomes whose evaluation killed workers — the
+    # designer is told so it stops proposing equivalents of them
+    quarantined = [{"id": r.rid,
+                    "genome": r.genome.to_json() if r.genome else None,
+                    "error": r.error}
+                   for r in population.quarantined_records()] or None
     prompt = prompts.designer_prompt(
         base_analysis, reference_analysis, base.source,
         knowledge.FINDINGS_DOCUMENT, avenue_texts,
-        _candidate_edits(base.genome), task_text)
+        _candidate_edits(base.genome), task_text,
+        quarantined=quarantined)
     reply = prompts.extract_reply_json(llm.complete(prompt))
 
     plans = list(reply["experiments"])

@@ -124,6 +124,25 @@ def build_service(spec: dict, incarnation: int = 0):
             seed=spec.get("seed", 0),
             crash_rate=spec.get("crash_rate", 0.1),
             incarnation=incarnation)
+    if kind == "corrupt_timing":
+        from .resilience import CorruptTimingService
+        return CorruptTimingService(
+            build_service(spec["inner"], incarnation),
+            seed=spec.get("seed", 0),
+            corrupt_rate=spec.get("corrupt_rate", 0.1),
+            factor=spec.get("factor", 5.0))
+    if kind == "poison":
+        from .resilience import POISON_MARKER, PoisonService
+        return PoisonService(
+            build_service(spec["inner"], incarnation),
+            marker=spec.get("marker", POISON_MARKER))
+    if kind == "drift":
+        from .resilience import DriftService
+        return DriftService(
+            build_service(spec["inner"], incarnation),
+            drift_after=spec.get("drift_after", 0),
+            drift_factor=spec.get("drift_factor", 1.5),
+            incarnation=incarnation)
     if kind == "echo":
         return EchoService(latency_s=spec.get("latency_s", 0.0))
     if kind == "sleepy":

@@ -71,10 +71,24 @@ Cross-transport determinism contract (load-bearing)
    any order; the scientist's drain applies them sorted by record id and
    persists pending/completed state after every application, so
    kill-and-resume stays trajectory-identical across transports.
+4. **Integrity re-measurement rides the same invariants.**  A quorum
+   re-measure sample (``core.integrity.TimingAuditor.salted``) is the same
+   kernel plus a trailing comment: the genome — and therefore the platform
+   timing model — is unchanged, but the content address differs, so each
+   sample is an independent *deterministic* jitter draw that caches like
+   any other submission (a campaign killed mid-quorum replays completed
+   samples as cache hits).  Canary sentinels go the other way: one constant
+   source, so its verdict is constant on a healthy worker — which is why
+   ``run_direct`` must bypass both the queue (the canary targets a
+   *specific* worker) and the cache (a cached verdict would mask drift).
+   Canary measurements never enter the cache and never consume a campaign
+   submission slot in the drain.
 
 Only platform *verdicts* are cached (ok / compile_error / runtime_error /
-incorrect); submissions that failed at the queue level ("failed") never
-produced a verdict and are always retried.
+incorrect); submissions that failed at the queue level ("failed"), gave up
+after repeated worker deaths ("worker_error"), or were quarantine-blocked
+("quarantined") never produced a platform verdict and are never cached —
+lifting a quarantine or raising ``max_requeues`` re-evaluates them fresh.
 """
 from __future__ import annotations
 
@@ -153,6 +167,12 @@ class EvalCache:
                     continue
                 try:
                     d = json.loads(line)
+                    if d.get("invalidated"):
+                        # tombstone (drift invalidation): later lines win,
+                        # so drop whatever an earlier line established
+                        self._lines += 1
+                        self._entries.pop(d["key"], None)
+                        continue
                     res = EvalResult(d["status"], d.get("error", ""),
                                      d.get("timings_us", {}))
                 except (json.JSONDecodeError, KeyError):
@@ -222,6 +242,20 @@ class EvalCache:
         self._lines = len(self._entries)
         self.compactions += 1
 
+    def invalidate(self, key: str) -> bool:
+        """Drop ``key``'s verdict — it was measured by a worker later found
+        to be drifting, so it can no longer be trusted.  Persisted as an
+        appended tombstone line (later lines win on reload); compaction
+        clears tombstones.  Returns whether the key was present."""
+        with self._lock:
+            present = self._entries.pop(key, None) is not None
+            if self.path:
+                with open(self.path, "a") as f:
+                    f.write(json.dumps({"key": key, "invalidated": True})
+                            + "\n")
+                self._lines += 1
+            return present
+
     def compact(self) -> None:
         """Force a compaction (e.g. at campaign end)."""
         with self._lock:
@@ -245,7 +279,10 @@ class EvalHandle:
     ``EvalResult`` — or re-raises whatever the worker raised (including
     ``BaseException`` such as ``KeyboardInterrupt``, so a killed campaign
     still unwinds through the drain loop).  ``requeues`` counts how many
-    times the job was re-enqueued after a worker death."""
+    times the job was re-enqueued after a worker *death*; ``busy_reroutes``
+    counts re-enqueues because every retry found the worker occupied —
+    deliberately separate counters, because a saturated-but-healthy pool
+    must never exhaust a job's death budget."""
 
     def __init__(self, key: str, tag=None) -> None:
         self.key = key
@@ -254,6 +291,7 @@ class EvalHandle:
         self.worker: Optional[int] = None
         self.duration_s = 0.0
         self.requeues = 0
+        self.busy_reroutes = 0
         self._event = threading.Event()
         self._result: Optional[EvalResult] = None
         self._exc: Optional[BaseException] = None
@@ -290,7 +328,9 @@ class EvalPool:
                  idle_timeout_s: float = 0.5,
                  transport="inprocess",
                  transport_options: Optional[dict] = None,
-                 max_requeues: int = 32) -> None:
+                 max_requeues: int = 32,
+                 max_busy_reroutes: int = 1000,
+                 quarantine=None) -> None:
         services = list(services) if services is not None else []
         if not services and not isinstance(transport, WorkerTransport):
             raise ValueError("EvalPool needs at least one service "
@@ -302,12 +342,19 @@ class EvalPool:
         self._sleep = sleep
         self._idle_s = idle_timeout_s
         self.max_requeues = max_requeues
+        self.max_busy_reroutes = max_busy_reroutes
+        #: Optional ``core.integrity.Quarantine``: worker deaths feed it,
+        #: quarantined content hashes short-circuit at submit time.
+        self.quarantine = quarantine
         self.transport = make_transport(transport, services,
                                         retry_policy=self.retry_policy,
                                         options=transport_options)
         self.transport.emitter = self._emit
         self._queue: queue.PriorityQueue = queue.PriorityQueue()
         self._threads: dict[int, threading.Thread] = {}
+        # one lock per worker index: serializes run_direct (canaries /
+        # respawns target a *specific* worker) against that worker's thread
+        self._worker_locks: dict[int, threading.Lock] = {}
         self._lock = threading.Lock()
         self._seq = itertools.count()
         self._closed = False
@@ -337,10 +384,22 @@ class EvalPool:
     # ----------------------------------------------------------------- api
     def submit_async(self, source: str, priority: int = PRIORITY_CAMPAIGN,
                      tag=None) -> EvalHandle:
-        """Enqueue one submission; returns immediately with its handle."""
+        """Enqueue one submission; returns immediately with its handle.
+
+        A quarantined content hash never reaches a worker: its handle
+        resolves instantly to a ``quarantined`` verdict (uncached, so
+        lifting the quarantine re-evaluates it fresh)."""
         if self._closed:
             raise RuntimeError("EvalPool is closed")
         handle = EvalHandle(EvalCache.key_of(source), tag=tag)
+        if self.quarantine is not None:
+            reason = self.quarantine.blocked(handle.key)
+            if reason is not None:
+                self._emit("quarantine_block", key=handle.key[:12],
+                           tag=handle.tag, reason=reason)
+                handle._finish(result=EvalResult(
+                    "quarantined", f"quarantined kernel: {reason}"))
+                return handle
         self._queue.put((priority, next(self._seq), source, handle))
         self._ensure_workers()
         return handle
@@ -358,6 +417,29 @@ class EvalPool:
         """Queue-jumping tier for drain-blocking work (e.g. re-evaluating
         the one kernel the scientist cannot advance without)."""
         return self.submit_async(source, priority=PRIORITY_URGENT, tag=tag)
+
+    def run_direct(self, idx: int, source: str) -> EvalResult:
+        """Run ``source`` on worker ``idx`` *now*, synchronously — bypassing
+        both the queue and the cache.  This is the canary lane: drift
+        detection needs the measurement to come from one specific worker
+        (the queue routes to whoever is free) and to be freshly measured (a
+        cache hit would mask drift).  Serialized against the worker's own
+        thread via its per-index lock; blocks while that worker finishes
+        its in-flight job.  Raises whatever the transport raises
+        (``WorkerDiedError`` included) — callers classify failures."""
+        if not 0 <= idx < self.transport.num_workers:
+            raise ValueError(f"no worker {idx}")
+        with self._lock_for(idx):
+            return resilience.retry_call(
+                lambda: self.transport.run(idx, source),
+                policy=self.retry_policy, sleep=self._sleep)
+
+    def respawn_worker(self, idx: int) -> None:
+        """Force worker ``idx`` to be rebuilt (stepped incarnation) — the
+        drift response: a replacement worker measures clean.  Serialized
+        against the worker's in-flight job."""
+        with self._lock_for(idx):
+            self.transport.respawn(idx)
 
     # -------------------------------------------------------- pause/resume
     def pause(self) -> None:
@@ -431,6 +513,13 @@ class EvalPool:
         if self.events is not None:
             self.events.emit(event, **fields)
 
+    def _lock_for(self, idx: int) -> threading.Lock:
+        with self._lock:
+            lock = self._worker_locks.get(idx)
+            if lock is None:
+                lock = self._worker_locks[idx] = threading.Lock()
+            return lock
+
     def _ensure_workers(self) -> None:
         with self._lock:
             if self._closed:
@@ -467,7 +556,8 @@ class EvalPool:
                     if self._threads.get(idx) is threading.current_thread():
                         del self._threads[idx]
                 return
-            self._run_job(idx, source, handle, prio)
+            with self._lock_for(idx):
+                self._run_job(idx, source, handle, prio)
 
     def _run_job(self, idx: int, source: str, handle: EvalHandle,
                  priority: int = PRIORITY_CAMPAIGN) -> None:
@@ -501,6 +591,22 @@ class EvalPool:
                 self.cache.put(handle.key, res)
             handle.duration_s = time.perf_counter() - t0
             handle._finish(result=res)
+        except resilience.ServiceBusyError as e:
+            # every zero-backoff retry found this worker occupied: reroute —
+            # re-enqueue at the original priority so whichever worker frees
+            # up first takes it.  Deliberately NOT handle.requeues: a
+            # saturated-but-healthy pool must never exhaust a job's
+            # worker-death budget.
+            handle.busy_reroutes += 1
+            self._emit("busy_reroute", worker=idx, tag=handle.tag,
+                       busy_reroutes=handle.busy_reroutes)
+            if handle.busy_reroutes > self.max_busy_reroutes:
+                handle.duration_s = time.perf_counter() - t0
+                handle._finish(exc=RuntimeError(
+                    f"rerouted {handle.busy_reroutes} times without finding "
+                    f"a free worker: {e}"))
+            else:
+                self._queue.put((priority, next(self._seq), source, handle))
         except WorkerDiedError as e:
             # the worker died or stalled with this job in flight: requeue at
             # the original priority — any (respawned) worker re-evaluates to
@@ -508,9 +614,24 @@ class EvalPool:
             handle.requeues += 1
             self._emit("worker_requeue", worker=idx, tag=handle.tag,
                        requeues=handle.requeues, reason=str(e))
+            handle.duration_s = time.perf_counter() - t0
+            if self.quarantine is not None:
+                deaths = self.quarantine.record_death(handle.key, str(e))
+                blocked = self.quarantine.blocked(handle.key)
+                if blocked is not None:
+                    # this kernel kills workers deterministically: blacklist
+                    # its content hash so rediscoveries cost zero deaths
+                    self._emit("quarantine_add", key=handle.key[:12],
+                               tag=handle.tag, deaths=deaths, reason=blocked)
+                    handle._finish(result=EvalResult(
+                        "quarantined", f"quarantined kernel: {blocked}"))
+                    return
             if handle.requeues > self.max_requeues:
-                handle.duration_s = time.perf_counter() - t0
-                handle._finish(exc=RuntimeError(
+                # terminal *verdict*, not an exception: the campaign records
+                # it in the logbook (score inf) and moves on — one doomed
+                # kernel must not abort the drain.  Never cached.
+                handle._finish(result=EvalResult(
+                    "worker_error",
                     f"gave up after {handle.requeues} worker deaths: {e}"))
             else:
                 self._queue.put((priority, next(self._seq), source, handle))

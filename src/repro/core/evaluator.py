@@ -119,7 +119,10 @@ def estimate_us(genome: KernelGenome, m: int, n: int, k: int) -> float:
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class EvalResult:
-    status: str                 # ok | compile_error | runtime_error | incorrect
+    # ok | compile_error | runtime_error | incorrect — platform verdicts —
+    # plus pool-level outcomes worker_error (requeue budget exhausted) and
+    # quarantined (content hash blacklisted by core.integrity.Quarantine)
+    status: str
     error: str = ""
     timings_us: dict = dataclasses.field(default_factory=dict)
 

@@ -28,7 +28,18 @@ from typing import Optional
 
 #: Events emitted by the evalpool/transport layer about worker health.
 WORKER_LIFECYCLE_EVENTS = ("worker_spawn", "worker_exit", "worker_died",
-                           "worker_requeue", "pool_pause", "pool_resume")
+                           "worker_requeue", "worker_respawn",
+                           "pool_pause", "pool_resume")
+
+#: Events emitted by the verdict-trust layer (``core.integrity``): audit
+#: flags and quorum resolutions, quarantine adds/blocks, canary checks and
+#: drift responses, circuit-breaker transitions, health snapshots, and
+#: budget stops.  The substream an operator greps to answer "can I trust
+#: this campaign's timings?".
+INTEGRITY_EVENTS = ("audit_flag", "audit_quorum", "quarantine_add",
+                    "quarantine_block", "canary", "worker_drift",
+                    "worker_respawn", "verdict_invalidated", "breaker",
+                    "health", "budget_stop", "busy_reroute")
 
 
 class EventLog:
@@ -81,6 +92,12 @@ class EventLog:
         if worker is not None:
             out = [r for r in out if r.get("worker") == worker]
         return out
+
+    def integrity_events(self, event: Optional[str] = None) -> list[dict]:
+        """The verdict-trust substream (audits, quarantines, canaries,
+        breakers, health), optionally filtered to one event name."""
+        wanted = INTEGRITY_EVENTS if event is None else (event,)
+        return [r for r in self.records if r["event"] in wanted]
 
     def stage_durations(self) -> dict:
         """stage name -> list of duration_s from stage_end events."""

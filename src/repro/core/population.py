@@ -56,8 +56,13 @@ class KernelRecord:
     experiment: dict                          # {description, rubric, performance, innovation}
     writer_report: str = ""                   # what the writer says it actually did
     # pending | ok | compile_error | runtime_error | incorrect | failed
+    #         | worker_error | quarantined
     # ("failed": the evaluation service itself errored after retries —
-    #  platform-level failure, not a verdict about the kernel)
+    #  platform-level failure, not a verdict about the kernel;
+    #  "worker_error": the kernel's evaluation killed workers until the
+    #  pool's requeue budget ran out; "quarantined": its content hash is
+    #  blacklisted by core.integrity.Quarantine — both score inf, so
+    #  selection never touches them)
     status: str = "pending"
     error: str = ""                           # platform feedback on failure
     timings_us: dict = dataclasses.field(default_factory=dict)  # config_key -> µs
@@ -135,6 +140,12 @@ class Population:
 
     def ok_records(self) -> list[KernelRecord]:
         return [r for r in self if r.status == "ok"]
+
+    def quarantined_records(self) -> list[KernelRecord]:
+        """Members blacklisted by ``core.integrity.Quarantine`` (their
+        evaluation killed workers): excluded from selection, surfaced to
+        the designer as genomes to steer away from."""
+        return [r for r in self if r.status == "quarantined"]
 
     def best(self) -> Optional[KernelRecord]:
         ok = self.ok_records()

@@ -9,6 +9,7 @@ parsers are backend-agnostic.
 from __future__ import annotations
 
 import json
+from typing import Optional
 
 STATE_OPEN = "<<<STATE_JSON"
 STATE_CLOSE = "STATE_JSON>>>"
@@ -73,13 +74,24 @@ JSON object: {{"basis_code": "<id>", "basis_reference": "<id>",
 # ---------------------------------------------------------------- designer
 def designer_prompt(base_analysis: dict, reference_analysis: dict,
                     base_source: str, findings: str, avenue_texts: list,
-                    candidate_edits: list, task_text: str) -> str:
+                    candidate_edits: list, task_text: str,
+                    quarantined: Optional[list] = None) -> str:
     payload = {
         "stage": "designer",
         "base": base_analysis,
         "reference": reference_analysis,
         "candidate_edits": candidate_edits,
     }
+    quarantine_section = ""
+    if quarantined:
+        payload["quarantined"] = quarantined
+        quarantine_section = (
+            "\n## Quarantined kernels (do not redesign these)\n"
+            "The kernels listed under 'quarantined' in the state block "
+            "crashed or wedged evaluation workers repeatedly and are "
+            "blacklisted: any plan producing an equivalent kernel will be "
+            "rejected without measurement.  Steer your experiment plans "
+            "away from those configurations.\n")
     avenues = "\n".join(f"- {t}" for t in avenue_texts)
     return f"""You are the Experiment Designer of a GPU Kernel Scientist
 system.  Design the next round of optimization experiments for the kernel
@@ -101,7 +113,7 @@ below, using only black-box timing feedback.
 
 ## Avenue starting points
 {avenues}
-
+{quarantine_section}
 ## Instructions
 First produce 10 optimization 'avenues' that might be considered (a longer
 list than needed, to increase diversity).  Then produce exactly 5 experiment

@@ -278,6 +278,85 @@ class FlakyService:
         return getattr(self.inner, name)
 
 
+class CircuitOpenError(RuntimeError):
+    """Raised (or reported) when a circuit breaker is open: the dependency
+    is presumed down, so the caller should take its fallback path *now*
+    instead of paying the full retry/backoff schedule.  Deliberately not a
+    ``TransientError``: ``retry_call`` must not retry it."""
+
+
+class CircuitBreaker:
+    """Classic closed / open / half-open breaker, deterministic by design.
+
+    Guards a dependency (the LLM API, the evaluation backend) that is
+    retried per call by ``retry_call``: once ``failure_threshold``
+    *consecutive* calls have failed even after their retries, the breaker
+    opens and subsequent calls are refused up front — the scientist flips
+    straight to its rule-based fallback instead of paying the full backoff
+    schedule against a dead dependency on every stage.
+
+    Recovery is probed after ``cooldown_calls`` *refused calls* rather than
+    after a wall-clock interval: the campaign's behaviour stays a pure
+    function of the call sequence (no clock reads), which preserves the
+    kill-and-resume trajectory-identity contract.  The call that ends the
+    cooldown is admitted as the half-open probe; its outcome closes the
+    breaker (success) or re-opens it for another cooldown (failure).
+    """
+
+    def __init__(self, failure_threshold: int = 3, cooldown_calls: int = 8,
+                 name: str = "breaker"):
+        if failure_threshold < 1:
+            raise ValueError("failure_threshold must be >= 1")
+        if cooldown_calls < 1:
+            raise ValueError("cooldown_calls must be >= 1")
+        self.failure_threshold = failure_threshold
+        self.cooldown_calls = cooldown_calls
+        self.name = name
+        self.state = "closed"
+        self.failures = 0            # consecutive, while closed
+        self.skips = 0               # refused calls, while open
+        self.trips = 0               # lifetime closed->open transitions
+
+    def allow(self) -> bool:
+        """Admit this call?  Counts one cooldown tick when open; the call
+        that completes the cooldown is admitted as the half-open probe."""
+        if self.state == "closed":
+            return True
+        if self.state == "open":
+            self.skips += 1
+            if self.skips >= self.cooldown_calls:
+                self.state = "half_open"
+                return True          # this call IS the probe
+            return False
+        return False                 # half_open: one probe already in flight
+
+    def record_success(self) -> None:
+        self.state = "closed"
+        self.failures = 0
+        self.skips = 0
+
+    def record_failure(self) -> None:
+        if self.state == "half_open":
+            self.state = "open"      # probe failed: restart the cooldown
+            self.skips = 0
+            return
+        self.failures += 1
+        if self.state == "closed" and self.failures >= self.failure_threshold:
+            self.state = "open"
+            self.skips = 0
+            self.trips += 1
+
+    def state_dict(self) -> dict:
+        return {"state": self.state, "failures": self.failures,
+                "skips": self.skips, "trips": self.trips}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.state = d.get("state", "closed")
+        self.failures = d.get("failures", 0)
+        self.skips = d.get("skips", 0)
+        self.trips = d.get("trips", 0)
+
+
 class CrashService:
     """Wrap an ``EvaluationService`` and deterministically *kill the whole
     worker process* mid-benchmark — the fault class that distinguishes a
@@ -320,6 +399,167 @@ class CrashService:
         from .transport import service_spec_of
         return {"kind": "crash", "inner": service_spec_of(self.inner),
                 "seed": self.seed, "crash_rate": self.crash_rate}
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+class CorruptTimingService:
+    """Wrap an ``EvaluationService`` and corrupt a fraction of ``ok``
+    verdicts' timings — the silent measurement failure ``core.integrity``'s
+    ``TimingAuditor`` exists to catch (a thermal-throttled device, a
+    contended host, a platform bug reporting the wrong kernel's numbers).
+
+    The corruption draw is keyed on ``(seed, source_hash)`` — content, not
+    call order — so the *same* kernel source is corrupted (or not) on every
+    worker, every incarnation, and every quorum-free resubmission, exactly
+    like the platform's content-keyed jitter.  Crucially the auditor's
+    *salted* quorum samples hash differently and therefore draw their own
+    (mostly clean) corruption verdicts, which is what lets median-of-k
+    recover the true timing.  ``clone()`` keeps the same seed for the same
+    reason: corruption must be a property of the submission, not of which
+    worker served it, or ``workers=N`` would diverge from ``workers=1``.
+    """
+
+    def __init__(self, inner, seed: int = 0, corrupt_rate: float = 0.1,
+                 factor: float = 5.0):
+        if not 0.0 <= corrupt_rate <= 1.0:
+            raise ValueError("corrupt_rate must be in [0, 1]")
+        if factor <= 1.0:
+            raise ValueError("factor must be > 1")
+        self.inner = inner
+        self.seed = seed
+        self.corrupt_rate = corrupt_rate
+        self.factor = factor
+        self.corruptions = 0
+
+    def submit(self, source: str):
+        res = self.inner.submit(source)
+        if res.status != "ok" or not res.timings_us:
+            return res
+        skey = hashlib.sha256(source.encode()).hexdigest()
+        if _uniform01(self.seed, "corrupt", skey) >= self.corrupt_rate:
+            return res
+        self.corruptions += 1
+        scale = (self.factor
+                 if _uniform01(self.seed, "corrupt-dir", skey) < 0.5
+                 else 1.0 / self.factor)
+        timings = {k: v * scale for k, v in res.timings_us.items()}
+        return type(res)(res.status, res.error, timings)
+
+    def clone(self) -> "CorruptTimingService":
+        # SAME seed on purpose: corruption is content-keyed, so every
+        # worker must agree on which sources are corrupted (see class doc).
+        return CorruptTimingService(self.inner.clone(), seed=self.seed,
+                                    corrupt_rate=self.corrupt_rate,
+                                    factor=self.factor)
+
+    def service_spec(self) -> dict:
+        from .transport import service_spec_of
+        return {"kind": "corrupt_timing",
+                "inner": service_spec_of(self.inner), "seed": self.seed,
+                "corrupt_rate": self.corrupt_rate, "factor": self.factor}
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+#: Source marker that makes ``PoisonService`` kill its worker.
+POISON_MARKER = "POISON"
+
+
+class PoisonService:
+    """Wrap an ``EvaluationService`` and hard-kill the worker process when
+    the submitted source contains :data:`POISON_MARKER` — a *deterministic*
+    worker-killer, unlike ``CrashService``'s random one.  This models the
+    poison-kernel class (infinite loop, device wedge, segfault) that dies
+    *every* time it runs: without ``core.integrity.Quarantine`` the
+    evolutionary loop burns ``max_requeues`` worker deaths on every
+    rediscovery of the same genome.  Subprocess workers only — in-process
+    it would take the test runner down, which is the point of the marker
+    check living behind the transport boundary."""
+
+    def __init__(self, inner, marker: str = POISON_MARKER):
+        self.inner = inner
+        self.marker = marker
+
+    def submit(self, source: str):
+        if self.marker in source:
+            os._exit(23)          # hard worker death: the kernel wedged it
+        return self.inner.submit(source)
+
+    def clone(self) -> "PoisonService":
+        return PoisonService(self.inner.clone(), marker=self.marker)
+
+    def service_spec(self) -> dict:
+        from .transport import service_spec_of
+        return {"kind": "poison", "inner": service_spec_of(self.inner),
+                "marker": self.marker}
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+class DriftService:
+    """Wrap an ``EvaluationService`` and let incarnation 0 *drift*: after
+    ``drift_after`` submissions, every ``ok`` verdict's timings are scaled
+    by ``drift_factor`` — the slow measurement skew of an overheating or
+    contended device, invisible to per-verdict checks because it biases
+    *every* verdict consistently.  ``core.integrity``'s canary sentinel is
+    the detector: its known-timing kernel shifts with the drift.  A
+    respawned worker (stepped incarnation) measures clean again, modelling
+    a device reset; ``respawn()`` lets the in-process transport step the
+    incarnation without a process boundary."""
+
+    def __init__(self, inner, drift_after: int = 0, drift_factor: float = 1.5,
+                 incarnation: int = 0):
+        if drift_factor <= 0:
+            raise ValueError("drift_factor must be positive")
+        self.inner = inner
+        self.drift_after = drift_after
+        self.drift_factor = drift_factor
+        self.incarnation = incarnation
+        self.calls = 0
+
+    def _drifting(self) -> bool:
+        return (self.incarnation == 0 and self.drift_after > 0
+                and self.calls > self.drift_after)
+
+    def submit(self, source: str):
+        self.calls += 1
+        res = self.inner.submit(source)
+        if self._drifting() and res.status == "ok" and res.timings_us:
+            timings = {k: v * self.drift_factor
+                       for k, v in res.timings_us.items()}
+            return type(res)(res.status, res.error, timings)
+        return res
+
+    def respawn(self) -> None:
+        """Device reset: the replacement worker measures clean."""
+        self.incarnation += 1
+        self.calls = 0
+
+    def clone(self) -> "DriftService":
+        return DriftService(self.inner.clone(), drift_after=self.drift_after,
+                            drift_factor=self.drift_factor,
+                            incarnation=self.incarnation)
+
+    def service_spec(self) -> dict:
+        from .transport import service_spec_of
+        return {"kind": "drift", "inner": service_spec_of(self.inner),
+                "drift_after": self.drift_after,
+                "drift_factor": self.drift_factor}
+
+    def state_dict(self) -> dict:
+        inner = getattr(self.inner, "state_dict", None)
+        return {"calls": self.calls, "incarnation": self.incarnation,
+                "inner": inner() if inner else None}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.calls = d["calls"]
+        self.incarnation = d.get("incarnation", 0)
+        if d.get("inner") is not None:
+            self.inner.load_state_dict(d["inner"])
 
     def __getattr__(self, name):
         return getattr(self.inner, name)

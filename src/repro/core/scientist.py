@@ -50,12 +50,15 @@ import warnings
 from typing import Optional
 
 from . import codegen, designer, prompts, resilience, selector, writer
-from .evalpool import EvalBackend, EvalCache, EvalPool
+from .evalpool import (PRIORITY_URGENT, EvalBackend, EvalCache, EvalHandle,
+                       EvalPool)
 from .events import EventLog
 from .evaluator import EvaluationService, EvalResult
 from .genome import SEED_LIBRARY, SEED_MXU, SEED_NAIVE, KernelGenome
+from .integrity import Integrity
 from .llm import LLMClient, ScriptedLLM
-from .population import KernelRecord, Population
+from .population import KernelRecord, Population, geomean
+from .resilience import CircuitOpenError
 
 #: Sentinel distinguishing "not passed" from an explicit None for the
 #: deprecated constructor kwargs.
@@ -64,7 +67,10 @@ _UNSET = object()
 # v2: "service" holds EvalPool worker states; inflight gained "pending"
 # (enqueued-but-unfinished record ids).  v1 files load fine: a bare service
 # state dict is treated as the first worker's, and "pending" defaults empty.
-_STATE_SCHEMA = 2
+# v3: adds "integrity" (audit ledger, quarantine set, breaker states, canary
+# reference, consumed wall-clock).  v2 files load fine: a missing section
+# leaves the Integrity components at their just-constructed state.
+_STATE_SCHEMA = 3
 
 
 def _errtext(e: BaseException) -> str:
@@ -105,6 +111,7 @@ class KernelScientist:
                  retry_policy: Optional[resilience.RetryPolicy] = None,
                  events: Optional[EventLog] = None,
                  sleep=time.sleep,
+                 integrity: Optional[Integrity] = None,
                  service=_UNSET,
                  pool=_UNSET,
                  workers=_UNSET,
@@ -116,6 +123,12 @@ class KernelScientist:
         in a one-worker cached ``EvalPool``.  ``None`` wraps a default
         ``EvaluationService()``.
 
+        ``integrity`` is the verdict-trust layer (``core.integrity``):
+        timing audits with quorum re-measurement, poison-kernel quarantine,
+        per-worker canaries, circuit breakers, and campaign budgets.  The
+        default ``Integrity()`` has every component off, so behaviour is
+        bit-for-bit what it was without one.
+
         ``service=`` / ``pool=`` / ``workers=`` / ``eval_cache=`` are
         deprecated shims for the pre-``EvalBackend`` surface: they still
         behave exactly as before but emit ``DeprecationWarning``; construct
@@ -123,6 +136,7 @@ class KernelScientist:
         ``backend=EvalPool.of(svc, workers=3, cache=EvalCache(path))``.
         """
         self.llm = llm or ScriptedLLM()
+        self.integrity = integrity or Integrity()
         self.task_text = task_text
         self.population = Population()
         self.logbook: list[GenerationLog] = []
@@ -138,6 +152,14 @@ class KernelScientist:
         self.pool: EvalBackend = self._resolve_backend(
             backend, service=service, pool=pool, workers=workers,
             eval_cache=eval_cache)
+        self._wire_quarantine()
+
+    def _wire_quarantine(self) -> None:
+        """Hand the pool the campaign's quarantine so worker deaths feed it
+        and blacklisted hashes are blocked at submit time."""
+        if (self.integrity.quarantine is not None
+                and isinstance(self.pool, EvalPool)):
+            self.pool.quarantine = self.integrity.quarantine
 
     def _default_cache(self) -> EvalCache:
         """The cache __init__ semantics attach to a pool it builds itself:
@@ -218,6 +240,7 @@ class KernelScientist:
             events=getattr(old, "events", None) or self.events,
             sleep=getattr(old, "_sleep", self._sleep),
             transport=transport)
+        self._wire_quarantine()
         if isinstance(old, EvalPool):
             old.close(wait=False)
 
@@ -261,6 +284,8 @@ class KernelScientist:
         sci._seeded = True
         sci._restore_backend(sci.llm, state.get("llm"))
         sci.pool.load_state_dict(state.get("service"))
+        if state.get("integrity"):
+            sci.integrity.load_state_dict(state["integrity"])
         inflight = state.get("inflight")
         if inflight:
             inflight.setdefault("pending", [])
@@ -311,7 +336,7 @@ class KernelScientist:
                             "performance": [0, 0], "innovation": 0},
                 writer_report="(seed kernel)", generation=0)
             self.population.add(rec)
-            handles.append((rec, self.pool.submit_async(source, tag=rec.rid)))
+            handles.append((rec, self._submit_record(source, tag=rec.rid)))
         for rec, handle in handles:   # seeds evaluate concurrently
             self._apply_handle(rec, handle)
             self._persist()
@@ -362,7 +387,7 @@ class KernelScientist:
             # resumed mid-drain: the writer output is durable — re-enqueue
             # its evaluation (a duplicate whose verdict already landed in
             # the cache returns without consuming a platform slot)
-            handles[rid] = self.pool.submit_async(
+            handles[rid] = self._submit_record(
                 self.population.get(rid).source, tag=rid)
 
         for exp in picked[len(submitted) + len(pending):]:
@@ -372,7 +397,7 @@ class KernelScientist:
             pending.append(rec.rid)
             inflight["pending"] = list(pending)
             self._persist(inflight)
-            handles[rec.rid] = self.pool.submit_async(rec.source, tag=rec.rid)
+            handles[rec.rid] = self._submit_record(rec.source, tag=rec.rid)
 
         for rid in sorted(handles):   # apply in submission order
             rec = self.population.get(rid)
@@ -383,6 +408,18 @@ class KernelScientist:
                               else None))
             inflight["submitted"] = [list(s) for s in submitted]
             inflight["pending"] = list(pending)
+            self._persist(inflight)
+
+        remeasured = self._run_canaries(generation, handles)
+        if remeasured:
+            # drifted-worker verdicts were re-measured: refresh the
+            # generation's submitted tuples from the trusted records
+            submitted = [
+                (rid, self.population.get(rid).status,
+                 self.population.get(rid).score
+                 if self.population.get(rid).score != float("inf") else None)
+                for (rid, _, _) in submitted]
+            inflight["submitted"] = [list(s) for s in submitted]
             self._persist(inflight)
 
         best = self.population.best()
@@ -402,6 +439,13 @@ class KernelScientist:
             "generation_end", generation=generation, best_rid=log.best_rid,
             best_geomean_us=(None if log.best_geomean_us == float("inf")
                              else round(log.best_geomean_us, 3)))
+        if self.integrity.health is not None:
+            self.integrity.health.snapshot(
+                self.events, generation=generation,
+                population=len(self.population),
+                submissions=getattr(self.pool, "submissions", None),
+                best_geomean_us=(None if log.best_geomean_us == float("inf")
+                                 else round(log.best_geomean_us, 3)))
         return log
 
     def _write_experiment(self, generation: int, sel, exp: dict
@@ -429,6 +473,8 @@ class KernelScientist:
         return rec
 
     def run(self, generations: int) -> Optional[KernelRecord]:
+        if self.integrity.health is not None:
+            self.integrity.health.start()
         remaining = generations
         if len(self.population) == 0 and self._inflight is None:
             self.seed()
@@ -438,15 +484,60 @@ class KernelScientist:
             remaining -= 1
         start = len(self.logbook) + 1
         for g in range(start, start + remaining):
+            # budgets are checked at generation boundaries only: the
+            # campaign stops cleanly with everything persisted, never
+            # mid-drain, and a resumed run re-checks before continuing
+            if self._budget_stop(g):
+                break
             self.run_generation(g)
         return self.population.best()
+
+    def _budget_stop(self, generation: int) -> bool:
+        health = self.integrity.health
+        if health is None:
+            return False
+        reason = health.budget_exceeded(
+            getattr(self.pool, "submissions", 0) or 0)
+        if reason is None:
+            return False
+        self.events.emit("budget_stop", generation=generation, reason=reason,
+                         elapsed_s=round(health.elapsed_s, 3))
+        self._persist()
+        return True
 
     # ------------------------------------------------------------ helpers
     def _stage(self, stage: str, generation: int, fn, fallback=None):
         """Run one LLM stage under the retry policy; fall back to the
-        deterministic rule-based decision if it stays broken."""
+        deterministic rule-based decision if it stays broken.
+
+        With an LLM circuit breaker configured (``core.integrity``), a
+        stage whose dependency is presumed down skips the whole retry/
+        backoff schedule and goes straight to the fallback; the call that
+        ends the breaker's cooldown is admitted as the half-open probe."""
         self.events.emit("stage_start", stage=stage, generation=generation)
         t0 = time.perf_counter()
+        brk = self.integrity.llm_breaker
+
+        if brk is not None and not brk.allow():
+            e = CircuitOpenError(
+                f"LLM circuit open ({brk.failures} consecutive stage "
+                f"failures); using the rule-based fallback")
+            self.events.emit("breaker", name="llm", action="skip",
+                             state=brk.state, stage=stage,
+                             generation=generation)
+            if fallback is None:
+                self.events.emit("stage_end", stage=stage,
+                                 generation=generation, status="error",
+                                 error=_errtext(e), duration_s=round(
+                                     time.perf_counter() - t0, 6))
+                raise e
+            self.events.emit("fallback", stage=stage, generation=generation,
+                             error=_errtext(e))
+            out = fallback()
+            self.events.emit("stage_end", stage=stage, generation=generation,
+                             status="fallback",
+                             duration_s=round(time.perf_counter() - t0, 6))
+            return out
 
         def on_retry(attempt, exc, delay):
             self.events.emit("retry", stage=stage, generation=generation,
@@ -457,7 +548,13 @@ class KernelScientist:
         try:
             out = resilience.retry_call(fn, policy=self.retry_policy,
                                         on_retry=on_retry, sleep=self._sleep)
+            if brk is not None:
+                self._breaker_record(brk, success=True, stage=stage,
+                                     generation=generation)
         except Exception as e:
+            if brk is not None:
+                self._breaker_record(brk, success=False, stage=stage,
+                                     generation=generation)
             if fallback is None:
                 self.events.emit("stage_end", stage=stage,
                                  generation=generation, status="error",
@@ -473,21 +570,55 @@ class KernelScientist:
                          duration_s=round(time.perf_counter() - t0, 6))
         return out
 
+    def _breaker_record(self, brk, success: bool, **fields) -> None:
+        prev = brk.state
+        brk.record_success() if success else brk.record_failure()
+        if brk.state != prev:
+            self.events.emit("breaker", name=brk.name,
+                             transition=f"{prev}->{brk.state}", **fields)
+
+    def _submit_record(self, source: str, tag,
+                       priority: int = None) -> EvalHandle:
+        """Submit through the eval circuit breaker (when configured): an
+        open breaker refuses the submission up front with a pre-failed
+        handle, so the drain marks the record ``failed`` without paying the
+        pool's retry schedule against a dead backend."""
+        brk = self.integrity.eval_breaker
+        if brk is not None and not brk.allow():
+            self.events.emit("breaker", name="eval", action="skip",
+                             state=brk.state, tag=tag)
+            handle = EvalHandle(EvalCache.key_of(source), tag=tag)
+            handle._finish(exc=CircuitOpenError(
+                f"evaluation circuit open ({brk.failures} consecutive "
+                f"submission failures)"))
+            return handle
+        if priority is None:
+            return self.pool.submit_async(source, tag=tag)
+        return self.pool.submit_async(source, priority=priority, tag=tag)
+
     def _apply_handle(self, rec: KernelRecord, handle) -> None:
-        """Block on one pooled evaluation and apply its outcome.  A
-        submission the platform never accepts (retries exhausted inside the
-        pool worker) is marked ``failed`` rather than left ``pending``, so
-        a resumed campaign carries no ghost members.  BaseExceptions
-        (KeyboardInterrupt — a killed campaign) propagate."""
+        """Block on one pooled evaluation, audit its verdict, and apply the
+        trusted outcome.  A submission the platform never accepts (retries
+        exhausted inside the pool worker) is marked ``failed`` rather than
+        left ``pending``, so a resumed campaign carries no ghost members.
+        BaseExceptions (KeyboardInterrupt — a killed campaign) propagate."""
+        brk = self.integrity.eval_breaker
         try:
             res = handle.result()
         except Exception as e:
+            # a refused (circuit-open) submission is not new evidence about
+            # the backend — only real failures feed the breaker
+            if brk is not None and not isinstance(e, CircuitOpenError):
+                self._breaker_record(brk, success=False, tag=rec.rid)
             rec.status = "failed"
             rec.error = _errtext(e)
             self.events.emit("eval_result", rid=rec.rid, status="failed",
                              error=rec.error, cached=handle.cached,
                              duration_s=round(handle.duration_s, 6))
             return
+        if brk is not None:
+            self._breaker_record(brk, success=True, tag=rec.rid)
+        res = self._audit(rec, res)
         self._apply_eval(rec, res)
         self.events.emit(
             "eval_result", rid=rec.rid, status=rec.status,
@@ -500,6 +631,121 @@ class KernelScientist:
         rec.status = res.status
         rec.error = res.error
         rec.timings_us = dict(res.timings_us)
+
+    # -------------------------------------------------- verdict integrity
+    def _audit(self, rec: KernelRecord, res: EvalResult) -> EvalResult:
+        """Gate one ``ok`` verdict through the timing auditor before it may
+        update the population.  A flagged verdict triggers the quorum:
+        ``quorum_k`` salted resubmissions of the same kernel (urgent
+        priority — the drain is blocked on this record), merged by robust
+        median.  Entirely content-keyed, so the audit replays identically
+        across workers counts, transports, and kill/resume (completed
+        samples return as cache hits)."""
+        auditor = self.integrity.auditor
+        if auditor is None or res.status != "ok" or not res.timings_us:
+            return res
+        g = geomean(res.timings_us.values())
+        reason = auditor.flag(g, self._trusted_baseline(rec))
+        if reason is None:
+            return res
+        auditor.flags += 1
+        self.events.emit("audit_flag", rid=rec.rid, geomean_us=round(g, 3),
+                         reason=reason)
+        sample_handles = [
+            self._submit_record(auditor.salted(rec.source, i),
+                                tag=f"{rec.rid}/quorum{i}",
+                                priority=PRIORITY_URGENT)
+            for i in range(1, auditor.quorum_k + 1)]
+        samples = []
+        for h in sample_handles:
+            try:
+                samples.append(h.result())
+            except Exception:
+                samples.append(None)   # a lost sample shrinks the quorum
+        final, corrected = auditor.merge(res, samples)
+        self.events.emit(
+            "audit_quorum", rid=rec.rid, corrected=corrected,
+            samples=sum(1 for s in samples
+                        if s is not None and s.status == "ok"),
+            geomean_us=round(g, 3),
+            final_geomean_us=(round(geomean(final.timings_us.values()), 3)
+                              if final.timings_us else None))
+        return final
+
+    def _trusted_baseline(self, rec: KernelRecord) -> Optional[float]:
+        """Geomean of the nearest ok ancestor — the lineage expectation the
+        auditor's z-test compares a fresh verdict against.  Breadth-first
+        up the parent links (deterministic: parents tuples are ordered);
+        ``None`` for seeds and orphans, which are therefore always
+        re-measured before being trusted."""
+        seen = set()
+        frontier = list(rec.parents)
+        while frontier:
+            rid, frontier = frontier[0], frontier[1:]
+            if rid in seen:
+                continue
+            seen.add(rid)
+            try:
+                anc = self.population.get(rid)
+            except KeyError:
+                continue
+            if anc.status == "ok" and anc.timings_us:
+                return geomean(anc.timings_us.values())
+            frontier.extend(anc.parents)
+        return None
+
+    def _run_canaries(self, generation: int, handles: dict) -> list:
+        """Generation-end drift sweep: run the known-timing sentinel on
+        every worker directly (bypassing queue + cache), compare against
+        the campaign reference, and respond to drift by respawning the
+        worker and re-measuring every record it evaluated this generation.
+        Returns the re-measured record ids."""
+        canary = self.integrity.canary
+        if (canary is None or not canary.due(generation)
+                or not isinstance(self.pool, EvalPool)):
+            return []
+        sentinel = canary.sentinel_source()
+        remeasured = []
+        for idx in range(self.pool.transport.num_workers):
+            try:
+                res = self.pool.run_direct(idx, sentinel)
+                g = (geomean(res.timings_us.values())
+                     if res.status == "ok" and res.timings_us else None)
+            except Exception as e:
+                self.events.emit("canary", generation=generation, worker=idx,
+                                 error=_errtext(e))
+                g = None
+            verdict = canary.check(g)
+            self.events.emit(
+                "canary", generation=generation, worker=idx, verdict=verdict,
+                geomean_us=(round(g, 3) if g is not None else None),
+                reference_us=(round(canary.reference_us, 3)
+                              if canary.reference_us is not None else None))
+            if verdict != "drift":
+                continue
+            self.events.emit("worker_drift", generation=generation,
+                             worker=idx,
+                             geomean_us=(round(g, 3) if g is not None
+                                         else None),
+                             reference_us=round(canary.reference_us or 0, 3))
+            self.pool.respawn_worker(idx)
+            # nothing this worker measured in this generation can be
+            # trusted: drop the cached verdicts and re-measure urgently
+            affected = sorted(
+                rid for rid, h in handles.items()
+                if getattr(h, "worker", None) == idx and not h.cached)
+            for rid in affected:
+                rec = self.population.get(rid)
+                if self.pool.cache is not None:
+                    self.pool.cache.invalidate(EvalCache.key_of(rec.source))
+                self.events.emit("verdict_invalidated", rid=rid, worker=idx,
+                                 generation=generation)
+                fresh = self._submit_record(rec.source, tag=rid,
+                                            priority=PRIORITY_URGENT)
+                self._apply_handle(rec, fresh)
+                self._persist()
+                remeasured.append(rid)
+        return remeasured
 
     def _backend_state(self, obj) -> Optional[dict]:
         sd = getattr(obj, "state_dict", None)
@@ -520,6 +766,8 @@ class KernelScientist:
                  "seeded": self._seeded,
                  "llm": self._backend_state(self.llm),
                  "service": self.pool.state_dict(),
+                 "integrity": (self.integrity.state_dict()
+                               if self.integrity.enabled else None),
                  "inflight": inflight}
         tmp = self.workdir / "state.json.tmp"
         tmp.write_text(json.dumps(state, indent=1))

@@ -35,8 +35,11 @@ def select(population: Population, llm: LLMClient,
         raise ValueError(f"selector returned unknown basis {basis!r}")
     if population.get(basis).status != "ok":
         raise ValueError(f"selector basis {basis!r} has no benchmarks")
-    if reference not in known:
-        # tolerate a hallucinated reference: fall back to the basis' parent
+    if (reference not in known
+            or population.get(reference).status == "quarantined"):
+        # tolerate a hallucinated reference — and refuse a quarantined one
+        # (a worker-killing kernel has no timings worth comparing against):
+        # fall back to the basis' parent
         parents = population.get(basis).parents
         reference = parents[0] if parents else basis
     return Selection(basis, reference, str(reply.get("rationale", "")))

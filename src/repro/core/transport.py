@@ -170,6 +170,14 @@ class WorkerTransport:
     def load_worker_states(self, states: list) -> None:
         raise NotImplementedError
 
+    def respawn(self, idx: int) -> None:
+        """Force worker ``idx`` to be rebuilt (the drift response from
+        ``core.integrity``: a replacement worker measures clean).  Base
+        implementation only records the request — transports with a real
+        worker boundary override it."""
+        self._emit("worker_respawn", worker=idx, transport=self.kind,
+                   effect="none")
+
     @property
     def submissions(self) -> int:
         raise NotImplementedError
@@ -209,6 +217,15 @@ class InProcessTransport(WorkerTransport):
         for svc, sd in zip(self.services, states):
             if sd is not None and hasattr(svc, "load_state_dict"):
                 svc.load_state_dict(sd)
+
+    def respawn(self, idx: int) -> None:
+        """No process to kill in-process; delegate to the service when it
+        models incarnations itself (e.g. ``DriftService.respawn``)."""
+        svc_respawn = getattr(self.services[idx], "respawn", None)
+        if svc_respawn is not None:
+            svc_respawn()
+        self._emit("worker_respawn", worker=idx, transport=self.kind,
+                   effect="service" if svc_respawn is not None else "none")
 
     @property
     def submissions(self) -> int:
@@ -399,6 +416,18 @@ class SubprocessTransport(WorkerTransport):
             raise RemoteEvalError(frame.get("error", "unknown remote error"))
         return EvalResult(frame["status"], frame.get("error", ""),
                           frame.get("timings_us", {}))
+
+    def respawn(self, idx: int) -> None:
+        """Kill worker ``idx`` and step its incarnation; the next ``run``
+        on this index spawns the replacement lazily (same path a detected
+        death takes, minus the in-flight job)."""
+        w = self._workers[idx]
+        if w is not None:
+            w.kill()
+            self._workers[idx] = None
+            self._incarnations[idx] += 1
+        self._emit("worker_respawn", worker=idx, transport=self.kind,
+                   incarnation=self._incarnations[idx], effect="process")
 
     # ------------------------------------------------------------ accounting
     def worker_states(self) -> list:

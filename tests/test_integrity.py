@@ -1,0 +1,729 @@
+"""Verdict trust (``core.integrity``): timing audits with quorum
+re-measurement, poison-kernel quarantine, per-worker drift canaries,
+circuit breakers, and campaign budgets.
+
+The acceptance scenarios of the integrity layer:
+  * corrupted-timing recovery — a campaign whose evaluation backend
+    silently corrupts >= 10% of verdict timings converges to the same best
+    kernel as a clean run, because the auditor's salted quorum re-measures
+    every improbable verdict;
+  * poison-kernel containment — a kernel that kills its worker every time
+    it runs costs the campaign exactly ``quarantine_after`` worker deaths
+    total (not ``max_requeues`` per rediscovery), and the campaign still
+    converges to the clean run's best genome;
+  * kill-and-resume with audits in flight — a campaign killed in the
+    middle of a re-measure quorum resumes to a trajectory bitwise
+    identical to an uninterrupted run (quorum samples are content-keyed
+    and cached).
+"""
+import json
+import os
+import pathlib
+
+import pytest
+
+from repro.core import codegen
+from repro.core.evaluator import EvalResult, EvaluationService
+from repro.core.genome import SEED_MXU
+from repro.core.evalpool import EvalCache, EvalPool
+from repro.core.events import EventLog
+from repro.core.integrity import (
+    CanaryController, HealthMonitor, Integrity, Quarantine, TimingAuditor,
+)
+from repro.core.llm import ScriptedLLM
+from repro.core.resilience import (
+    NO_WAIT_POLICY, POISON_MARKER, CircuitBreaker, CircuitOpenError,
+    CorruptTimingService, DriftService, PoisonService, TransientError,
+)
+from repro.core.scientist import KernelScientist
+from repro.core.transport import InProcessTransport, WorkerDiedError
+
+
+# ---------------------------------------------------------------------------
+# CircuitBreaker
+# ---------------------------------------------------------------------------
+def test_breaker_state_machine():
+    brk = CircuitBreaker(failure_threshold=2, cooldown_calls=3)
+    assert brk.state == "closed" and brk.allow()
+    brk.record_failure()
+    assert brk.state == "closed" and brk.allow()   # below threshold
+    brk.record_failure()
+    assert brk.state == "open" and brk.trips == 1
+    assert not brk.allow() and not brk.allow()     # cooldown ticks 1, 2
+    assert brk.allow()                             # tick 3: half-open probe
+    assert brk.state == "half_open"
+    assert not brk.allow()                         # one probe in flight only
+    brk.record_failure()                           # probe failed
+    assert brk.state == "open" and brk.skips == 0  # cooldown restarted
+    for _ in range(3):
+        brk.allow()
+    assert brk.state == "half_open"
+    brk.record_success()                           # probe succeeded
+    assert brk.state == "closed" and brk.failures == 0
+    assert brk.allow()
+
+
+def test_breaker_state_roundtrip():
+    brk = CircuitBreaker(failure_threshold=1, cooldown_calls=5)
+    brk.record_failure()
+    brk.allow()
+    fresh = CircuitBreaker(failure_threshold=1, cooldown_calls=5)
+    fresh.load_state_dict(brk.state_dict())
+    assert fresh.state_dict() == brk.state_dict()
+    assert fresh.state == "open" and fresh.skips == 1 and fresh.trips == 1
+
+
+def test_circuit_open_error_is_not_retryable():
+    # retry_call must not burn its backoff schedule on a refused call
+    assert not isinstance(CircuitOpenError("open"), TransientError)
+
+
+# ---------------------------------------------------------------------------
+# TimingAuditor
+# ---------------------------------------------------------------------------
+def test_auditor_flags_no_lineage_and_improbable_jumps():
+    aud = TimingAuditor(quorum_k=3)
+    assert aud.flag(300.0, None)                  # seeds: always re-measured
+    assert aud.flag(0.0, 300.0)                   # degenerate geomean
+    assert aud.flag(300.0, 290.0) is None         # ordinary step: trusted
+    assert aud.flag(150.0, 290.0) is None         # 2x win: plausible
+    assert aud.flag(1500.0, 300.0)                # 5x: the corruption factor
+    assert aud.flag(60.0, 300.0)                  # 5x in either direction
+
+
+def test_auditor_salt_changes_hash_not_genome():
+    src = "def k():\n    pass\n"
+    salts = [TimingAuditor.salted(src, i) for i in range(1, 4)]
+    assert len({EvalCache.key_of(s) for s in salts + [src]}) == 4
+    for s in salts:
+        assert s.startswith(src)                  # trailing comment only
+        assert "# integrity-quorum sample" in s
+
+
+def _ok(timings):
+    return EvalResult("ok", timings_us=timings)
+
+
+def test_auditor_merge_confirms_close_originals():
+    aud = TimingAuditor(quorum_k=3)
+    orig = _ok({"a": 100.0, "b": 200.0})
+    samples = [_ok({"a": 101.0, "b": 199.0}), _ok({"a": 99.5, "b": 201.0}),
+               _ok({"a": 100.5, "b": 200.5})]
+    final, corrected = aud.merge(orig, samples)
+    assert final is orig and not corrected        # kept bit-for-bit
+    assert aud.quorums == 1 and aud.corrected == 0
+
+
+def test_auditor_merge_corrects_outlier_to_sample_medians():
+    aud = TimingAuditor(quorum_k=3)
+    orig = _ok({"a": 500.0, "b": 1000.0})         # 5x corrupted
+    samples = [_ok({"a": 101.0, "b": 199.0}), _ok({"a": 99.0, "b": 201.0}),
+               _ok({"a": 100.0, "b": 200.0})]
+    final, corrected = aud.merge(orig, samples)
+    assert corrected and aud.corrected == 1
+    assert final.timings_us == {"a": 100.0, "b": 200.0}  # per-config medians
+    assert final.status == "ok"
+
+
+def test_auditor_merge_keeps_original_without_usable_samples():
+    aud = TimingAuditor(quorum_k=3)
+    orig = _ok({"a": 500.0})
+    final, corrected = aud.merge(orig, [None, EvalResult("failed", "boom")])
+    assert final is orig and not corrected
+
+
+# ---------------------------------------------------------------------------
+# Quarantine / CanaryController / HealthMonitor units
+# ---------------------------------------------------------------------------
+def test_quarantine_blocks_after_k_deaths():
+    q = Quarantine(after_k=2)
+    assert q.record_death("k1", "segfault") == 1
+    assert q.blocked("k1") is None and len(q) == 0
+    assert q.record_death("k1", "segfault") == 2
+    assert q.blocked("k1") == "segfault" and len(q) == 1
+    assert q.blocked("k2") is None and q.deaths("k1") == 2
+    fresh = Quarantine(after_k=2)
+    fresh.load_state_dict(q.state_dict())
+    assert fresh.blocked("k1") == "segfault" and fresh.deaths("k1") == 2
+
+
+def test_canary_reference_then_drift():
+    c = CanaryController(interval=2, tolerance=0.25)
+    assert c.due(2) and c.due(4) and not c.due(3)
+    assert c.check(400.0) == "baseline" and c.reference_us == 400.0
+    assert c.check(420.0) == "ok"                 # within 25%
+    assert c.check(600.0) == "drift"              # 1.5x
+    assert c.check(None) == "drift"               # dead worker
+    assert c.runs == 4 and c.drifts == 2
+    fresh = CanaryController(interval=2, tolerance=0.25)
+    fresh.load_state_dict(c.state_dict())
+    assert fresh.reference_us == 400.0 and fresh.drifts == 2
+
+
+def test_health_budgets_and_accumulated_wall_clock():
+    t = [0.0]
+    mon = HealthMonitor(max_wall_clock_s=100.0, max_submissions=10,
+                        clock=lambda: t[0])
+    mon.start()
+    assert mon.budget_exceeded(9) is None
+    assert "submission budget" in mon.budget_exceeded(10)
+    t[0] = 60.0
+    assert mon.budget_exceeded(0) is None and mon.elapsed_s == 60.0
+    # kill + resume: consumed wall-clock carries over
+    fresh = HealthMonitor(max_wall_clock_s=100.0, clock=lambda: t[0])
+    fresh.load_state_dict(mon.state_dict())
+    t[0] = 0.0
+    fresh.start()
+    t[0] = 40.0
+    assert fresh.elapsed_s == 100.0
+    assert "wall-clock budget" in fresh.budget_exceeded(0)
+    events = EventLog()
+    fresh.snapshot(events, generation=3)
+    (snap,) = events.select("health")
+    assert snap["elapsed_s"] == 100.0 and snap["generation"] == 3
+
+
+def test_integrity_defaults_are_all_off():
+    integ = Integrity()
+    assert not integ.enabled
+    assert integ.auditor is None and integ.quarantine is None
+    assert integ.canary is None and integ.health is None
+    assert integ.llm_breaker is None and integ.eval_breaker is None
+    integ.load_state_dict(integ.state_dict())     # no-op round-trip
+
+
+def test_integrity_state_roundtrip():
+    integ = Integrity(quorum_k=3, quarantine_after=2, canary_interval=1,
+                      budget_submissions=100, breaker_failures=2)
+    assert integ.enabled
+    integ.auditor.flags = 4
+    integ.quarantine.record_death("k", "dead")
+    integ.canary.check(300.0)
+    integ.llm_breaker.record_failure()
+    fresh = Integrity(quorum_k=3, quarantine_after=2, canary_interval=1,
+                      budget_submissions=100, breaker_failures=2)
+    fresh.load_state_dict(integ.state_dict())
+    assert fresh.auditor.flags == 4
+    assert fresh.quarantine.deaths("k") == 1
+    assert fresh.canary.reference_us == 300.0
+    assert fresh.llm_breaker.failures == 1
+    assert fresh.state_dict() == integ.state_dict()
+
+
+# ---------------------------------------------------------------------------
+# CorruptTimingService: content-keyed, worker-independent corruption
+# ---------------------------------------------------------------------------
+def test_corruption_is_a_property_of_the_source_not_the_call():
+    svc = CorruptTimingService(EvaluationService(seed=3, noise=0.0),
+                               seed=9, corrupt_rate=0.5)
+    sources = [codegen.render_source(SEED_MXU, f"variant {i}")
+               + f"\n# variant {i}\n" for i in range(8)]
+    first = {s: svc.submit(s).timings_us for s in sources}
+    again = {s: svc.submit(s).timings_us for s in sources}
+    assert first == again                          # same draw every call
+    clone = svc.clone()                            # SAME seed on purpose
+    assert {s: clone.submit(s).timings_us for s in sources} == first
+    # the configured rate really corrupts some and spares others
+    clean = EvaluationService(seed=3, noise=0.0)
+    truth = {s: clean.submit(s).timings_us for s in sources}
+    corrupted = [s for s in sources if first[s] != truth[s]]
+    assert corrupted and len(corrupted) < len(sources)
+    assert svc.corruptions == 2 * len(corrupted)
+
+
+# ---------------------------------------------------------------------------
+# Pool-level quarantine: deaths capped at K, resubmission blocked
+# ---------------------------------------------------------------------------
+class _MarkerDeathTransport(InProcessTransport):
+    """In-process stand-in for a poison kernel: raises WorkerDiedError
+    whenever the source carries the poison marker (the real PoisonService
+    ``os._exit``s, which only the subprocess transport survives)."""
+
+    def __init__(self, services, marker=POISON_MARKER):
+        super().__init__(services)
+        self.marker = marker
+        self.poison_deaths = 0
+
+    def run(self, idx, source):
+        if self.marker in source:
+            self.poison_deaths += 1
+            self._emit("worker_died", worker=idx, reason="poison kernel",
+                       transport=self.kind)
+            raise WorkerDiedError(f"poison death #{self.poison_deaths}")
+        return super().run(idx, source)
+
+
+def test_quarantine_caps_worker_deaths_per_poison_hash():
+    events = EventLog()
+    transport = _MarkerDeathTransport([EvaluationService(seed=0, noise=0.0)])
+    pool = EvalPool(transport=transport, events=events,
+                    retry_policy=NO_WAIT_POLICY, max_requeues=50,
+                    quarantine=Quarantine(after_k=2))
+    poison = f"# {POISON_MARKER}\nx = 1\n"
+
+    res = pool.submit_async(poison).result(timeout=30)
+    assert res.status == "quarantined"
+    assert transport.poison_deaths == 2           # exactly K, not 50
+    assert len(events.select("quarantine_add")) == 1
+
+    # rediscovery costs zero further deaths: blocked at submit time
+    res2 = pool.submit_async(poison).result(timeout=30)
+    assert res2.status == "quarantined"
+    assert transport.poison_deaths == 2
+    assert len(events.select("quarantine_block")) == 1
+    # a healthy kernel still flows normally through the same pool
+    healthy = codegen.render_source(SEED_MXU, "healthy")
+    assert pool.submit_async(healthy).result(timeout=30).status == "ok"
+    pool.close()
+
+
+def test_busy_reroutes_do_not_count_as_requeues():
+    from repro.core.resilience import ServiceBusyError
+
+    attempts = NO_WAIT_POLICY.max_attempts
+
+    class _BusyTransport(InProcessTransport):
+        def __init__(self, services, busy):
+            super().__init__(services)
+            self.busy = busy
+            self.calls = 0
+
+        def run(self, idx, source):
+            self.calls += 1
+            if self.calls <= self.busy:
+                raise ServiceBusyError("another submission in flight")
+            return super().run(idx, source)
+
+    events = EventLog()
+    # exactly one full retry schedule of busy answers: the pool must
+    # reroute (put the job back on the queue) rather than burn a requeue
+    transport = _BusyTransport([EvaluationService(seed=0, noise=0.0)],
+                               busy=attempts)
+    pool = EvalPool(transport=transport, events=events,
+                    retry_policy=NO_WAIT_POLICY)
+    handle = pool.submit_async(codegen.render_source(SEED_MXU, "busy probe"))
+    assert handle.result(timeout=30).status == "ok"
+    assert handle.busy_reroutes == 1
+    assert handle.requeues == 0                   # requeues = worker deaths
+    assert len(events.select("busy_reroute")) == 1
+    assert not events.select("worker_requeue")
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# Campaign-level: corrupted timings are audited back to the clean optimum
+# ---------------------------------------------------------------------------
+SEED = 7
+CORRUPT_SEED = 23          # content-keyed; chosen so the 6-generation
+GENS = 6                   # campaign sees corruption in gens 1+ as well
+
+
+def _clean_campaign():
+    sci = KernelScientist(
+        llm=ScriptedLLM(seed=SEED),
+        backend=EvalPool.of(EvaluationService(seed=SEED, noise=0.0),
+                            retry_policy=NO_WAIT_POLICY),
+        retry_policy=NO_WAIT_POLICY)
+    sci.run(GENS)
+    return sci
+
+
+@pytest.fixture(scope="module")
+def clean_run():
+    return _clean_campaign()
+
+
+def test_corrupted_timings_audited_back_to_clean_campaign(clean_run):
+    corrupt = CorruptTimingService(EvaluationService(seed=SEED, noise=0.0),
+                                   seed=CORRUPT_SEED, corrupt_rate=0.12)
+    integ = Integrity(quorum_k=3)
+    sci = KernelScientist(
+        llm=ScriptedLLM(seed=SEED),
+        backend=EvalPool.of(corrupt, retry_policy=NO_WAIT_POLICY),
+        retry_policy=NO_WAIT_POLICY, integrity=integ)
+    best = sci.run(GENS)
+
+    assert corrupt.corruptions > 0                # faults really happened
+    assert integ.auditor.flags >= 3               # seeds + corrupted children
+    assert integ.auditor.corrected > 0            # and were overruled
+    # zero-noise platform: every corrected verdict recovers the exact
+    # clean timings, so the whole campaign is bit-identical to the clean run
+    clean_best = clean_run.population.best()
+    assert best.rid == clean_best.rid
+    assert best.genome.describe() == clean_best.genome.describe()
+    assert [(r.rid, r.status, r.timings_us) for r in sci.population] == \
+           [(r.rid, r.status, r.timings_us) for r in clean_run.population]
+    assert sci.events.counts().get("audit_quorum", 0) == integ.auditor.quorums
+
+
+def _poison_target(clean_run):
+    """The poison kernel: the worst non-best, non-ancestor-of-best child —
+    a loser branch, so quarantining it must not change the winner."""
+    best = clean_run.population.best()
+    ancestors, frontier = set(), list(best.parents)
+    while frontier:
+        rid = frontier.pop()
+        if rid in ancestors:
+            continue
+        ancestors.add(rid)
+        frontier.extend(clean_run.population.get(rid).parents)
+    losers = [r for r in clean_run.population
+              if r.generation >= 1 and r.rid != best.rid
+              and r.rid not in ancestors and r.status == "ok"]
+    return max(losers, key=lambda r: (r.score, r.rid))
+
+
+class _PoisonLLM:
+    """Wrap an LLM and append the poison marker to writer replies whose
+    source matches ``target`` — the recurring poison kernel: every time
+    evolution (re)writes this kernel, the submitted source wedges its
+    worker."""
+
+    def __init__(self, inner, target: str):
+        self.inner = inner
+        self.target = target
+        self.poisoned = 0
+
+    def complete(self, prompt: str) -> str:
+        out = self.inner.complete(prompt)
+        try:
+            reply = json.loads(out)
+        except ValueError:
+            return out
+        if isinstance(reply, dict) and reply.get("source") == self.target:
+            reply["source"] += f"\n# {POISON_MARKER}\n"
+            self.poisoned += 1
+            return json.dumps(reply)
+        return out
+
+    def __getattr__(self, name):              # incl. state_dict passthrough
+        return getattr(self.inner, name)
+
+
+def test_poison_kernel_quarantined_campaign_converges_to_clean_best(
+        clean_run):
+    """The headline acceptance run: 12% corrupted timings AND a recurring
+    worker-killing kernel; the campaign must finish all generations, cap
+    the poison kernel's worker deaths at ``quarantine_after``, tell the
+    designer about the quarantined genome, and still converge to the clean
+    run's best kernel."""
+    target = _poison_target(clean_run)
+    llm = _PoisonLLM(ScriptedLLM(seed=SEED), target.source)
+    designer_prompts = []
+    real_complete = llm.complete
+
+    def spying_complete(prompt):
+        if '"stage": "designer"' in prompt:
+            designer_prompts.append(prompt)
+        return real_complete(prompt)
+
+    llm.complete = spying_complete
+    corrupt = CorruptTimingService(EvaluationService(seed=SEED, noise=0.0),
+                                   seed=CORRUPT_SEED, corrupt_rate=0.12)
+    transport = _MarkerDeathTransport([corrupt])
+    integ = Integrity(quorum_k=3, quarantine_after=2)
+    sci = KernelScientist(
+        llm=llm,
+        backend=EvalPool(transport=transport, retry_policy=NO_WAIT_POLICY),
+        retry_policy=NO_WAIT_POLICY, integrity=integ)
+    best = sci.run(GENS)
+
+    assert llm.poisoned >= 1                      # the poison really recurred
+    assert len(sci.logbook) == GENS               # zero aborted generations
+    quarantined = sci.population.quarantined_records()
+    assert len(quarantined) == 1
+    assert POISON_MARKER in quarantined[0].source
+    assert transport.poison_deaths == 2           # capped at K total
+    assert len(integ.quarantine) == 1
+    # the designer is told which genomes are radioactive
+    assert any("Quarantined kernels" in p for p in designer_prompts)
+    # and the campaign still finds the clean optimum
+    clean_best = clean_run.population.best()
+    assert best.genome.describe() == clean_best.genome.describe()
+    assert best.score == clean_best.score
+    counts = sci.events.counts()
+    assert counts.get("quarantine_add", 0) == 1
+    assert corrupt.corruptions > 0 and integ.auditor.corrected > 0
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-resume mid-quorum: trajectory identity
+# ---------------------------------------------------------------------------
+def _snapshot(sci):
+    return {
+        "trajectory": sci.trajectory(),
+        "logbook": [l.to_dict() for l in sci.logbook],
+        "population": [(r.rid, r.parents, r.status, r.timings_us)
+                       for r in sci.population],
+    }
+
+
+class _SaltCrashService:
+    """Raises KeyboardInterrupt (a real SIGINT/OOM kill) on the n-th
+    *quorum-sample* submission — the campaign dies in the middle of a
+    re-measure quorum, with some samples cached and some never run."""
+
+    def __init__(self, inner, crash_at_salt):
+        self.inner = inner
+        self.crash_at_salt = crash_at_salt
+        self.salts = 0
+
+    def submit(self, source):
+        if "integrity-quorum sample" in source:
+            self.salts += 1
+            if self.salts == self.crash_at_salt:
+                raise KeyboardInterrupt
+        return self.inner.submit(source)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def _quorum_campaign(tmp_path, name, service):
+    wd = tmp_path / name
+    return KernelScientist(
+        llm=ScriptedLLM(seed=SEED),
+        backend=EvalPool.of(service, cache=EvalCache(wd / "eval_cache.jsonl"),
+                            retry_policy=NO_WAIT_POLICY),
+        retry_policy=NO_WAIT_POLICY, workdir=wd,
+        integrity=Integrity(quorum_k=3))
+
+
+def _corrupt_service():
+    # noise > 0 so quorum samples are genuinely distinct draws (the
+    # content-keyed jitter is what makes the replay exact), corruption so
+    # generations past the seeds get flagged and quorumed too
+    return CorruptTimingService(EvaluationService(seed=SEED, noise=0.05),
+                                seed=CORRUPT_SEED, corrupt_rate=0.12)
+
+
+def test_kill_mid_quorum_resumes_to_identical_trajectory(tmp_path):
+    ref = _quorum_campaign(tmp_path, "ref", _corrupt_service())
+    ref.run(GENS)
+    assert ref.integrity.auditor.quorums > 3      # quorums beyond the seeds
+
+    # salts 1-9 belong to the three always-audited seeds; salt 11 lands in
+    # the middle of a generation-1 quorum (one sample cached, one in
+    # flight, one never submitted)
+    crash = _quorum_campaign(
+        tmp_path, "wd", _SaltCrashService(_corrupt_service(), crash_at_salt=11))
+    with pytest.raises(KeyboardInterrupt):
+        crash.run(GENS)
+    crash.pool.close(wait=False)
+    done = len(crash.logbook)
+    assert done < GENS
+
+    resumed = KernelScientist.resume(
+        tmp_path / "wd", llm=ScriptedLLM(seed=SEED),
+        backend=EvalPool.of(_corrupt_service(),
+                            cache=EvalCache(tmp_path / "wd"
+                                            / "eval_cache.jsonl"),
+                            retry_policy=NO_WAIT_POLICY),
+        retry_policy=NO_WAIT_POLICY, integrity=Integrity(quorum_k=3))
+    resumed.run(GENS - done)
+    assert _snapshot(resumed) == _snapshot(ref)
+    # the completed quorum samples replayed from the cache, not the platform
+    assert resumed.pool.stats()["cache_hits"] > 0
+
+
+def test_kill_mid_seed_quorum_restarts_to_identical_trajectory(tmp_path):
+    ref = _quorum_campaign(tmp_path, "ref", _corrupt_service())
+    ref.run(3)
+
+    # salt 5 is inside the second seed's quorum: the campaign dies before
+    # seeding completes (state.json says seeded=False), so resume restarts
+    # from scratch — but every already-measured verdict and quorum sample
+    # replays as a cache hit
+    crash = _quorum_campaign(
+        tmp_path, "wd", _SaltCrashService(_corrupt_service(), crash_at_salt=5))
+    with pytest.raises(KeyboardInterrupt):
+        crash.run(3)
+    crash.pool.close(wait=False)
+
+    resumed = KernelScientist.resume(
+        tmp_path / "wd", llm=ScriptedLLM(seed=SEED),
+        backend=EvalPool.of(_corrupt_service(),
+                            cache=EvalCache(tmp_path / "wd"
+                                            / "eval_cache.jsonl"),
+                            retry_policy=NO_WAIT_POLICY),
+        retry_policy=NO_WAIT_POLICY, integrity=Integrity(quorum_k=3))
+    assert resumed.events.select("resume")[0]["mode"] == "restart_unseeded"
+    resumed.run(3)
+    assert _snapshot(resumed) == _snapshot(ref)
+
+
+# ---------------------------------------------------------------------------
+# Canary sentinel: drift detection, respawn, re-measurement
+# ---------------------------------------------------------------------------
+def _drift_campaign(drift_after):
+    # call schedule at workers=1, canary every generation, no quorum:
+    # seeds = calls 1-3, gen1 = 4-6, gen1 canary = 7 (clean reference),
+    # gen2 = 8-10, gen2 canary = 11 — drift_after=7 skews all of gen2
+    svc = DriftService(EvaluationService(seed=SEED, noise=0.0),
+                       drift_after=drift_after, drift_factor=1.6)
+    sci = KernelScientist(
+        llm=ScriptedLLM(seed=SEED),
+        backend=EvalPool.of(svc, cache=EvalCache(None),
+                            retry_policy=NO_WAIT_POLICY),
+        retry_policy=NO_WAIT_POLICY,
+        integrity=Integrity(canary_interval=1))
+    sci.run(3)
+    return sci
+
+
+def test_canary_detects_drift_respawns_and_remeasures():
+    steady = _drift_campaign(drift_after=0)       # never drifts
+    drifted = _drift_campaign(drift_after=7)
+
+    counts = drifted.events.counts()
+    assert counts["worker_drift"] == 1
+    assert counts["worker_respawn"] == 1
+    # every generation-2 verdict came from the drifted worker: all three
+    # are invalidated (cache tombstones) and re-measured on the respawn
+    assert counts["verdict_invalidated"] == 3
+    canaries = drifted.events.select("canary")
+    assert [c["verdict"] for c in canaries if "verdict" in c] == \
+           ["baseline", "drift", "ok"]
+    assert drifted.integrity.canary.reference_us == \
+        steady.integrity.canary.reference_us
+    # the re-measured campaign lands exactly where the steady one did
+    assert [(r.rid, r.status, r.timings_us) for r in drifted.population] == \
+           [(r.rid, r.status, r.timings_us) for r in steady.population]
+    assert _snapshot(drifted)["trajectory"] == _snapshot(steady)["trajectory"]
+    assert not steady.events.select("worker_drift")
+
+
+# ---------------------------------------------------------------------------
+# Budgets and breakers inside the campaign loop
+# ---------------------------------------------------------------------------
+def test_submission_budget_stops_at_generation_boundary():
+    sci = KernelScientist(
+        llm=ScriptedLLM(seed=SEED),
+        backend=EvalPool.of(EvaluationService(seed=SEED, noise=0.0),
+                            retry_policy=NO_WAIT_POLICY),
+        retry_policy=NO_WAIT_POLICY,
+        integrity=Integrity(budget_submissions=5))
+    best = sci.run(10)
+    # seeds (3 submissions) fit the budget, generation 1 (3 more) exceeds
+    # it — checked at the boundary, so generation 2 never starts
+    assert len(sci.logbook) == 1
+    assert best is not None                       # stopped, not aborted
+    (stop,) = sci.events.select("budget_stop")
+    assert "submission budget" in stop["reason"] and stop["generation"] == 2
+    assert len(sci.events.select("health")) == 1  # one snapshot per gen
+
+
+class _DeadLLM:
+    def complete(self, prompt):
+        raise TransientError("llm api down")
+
+
+def test_llm_breaker_skips_straight_to_fallbacks():
+    sci = KernelScientist(
+        llm=_DeadLLM(),
+        backend=EvalPool.of(EvaluationService(seed=SEED, noise=0.0),
+                            retry_policy=NO_WAIT_POLICY),
+        retry_policy=NO_WAIT_POLICY,
+        integrity=Integrity(breaker_failures=2, breaker_cooldown=4))
+    sci.run(3)
+    assert len(sci.logbook) == 3                  # rule-based campaign
+    breaker = sci.events.select("breaker")
+    assert any(b.get("transition") == "closed->open" for b in breaker)
+    skips = [b for b in breaker if b.get("action") == "skip"]
+    assert skips                                  # open circuit refused calls
+    # refused stages paid zero retries: far fewer than every-stage-retries
+    stages = len(sci.events.select("stage_start"))
+    retries = sci.events.counts().get("retry", 0)
+    assert retries < stages * (NO_WAIT_POLICY.max_attempts - 1)
+    assert sci.events.counts()["fallback"] == stages
+
+
+class _BrokenService:
+    """Non-transient platform failure: every submission raises."""
+
+    def __init__(self):
+        self.submissions = 0
+
+    def submit(self, source):
+        self.submissions += 1
+        raise RuntimeError("evaluation platform rejected the submission")
+
+
+def test_eval_breaker_prefails_submissions_when_platform_is_down():
+    sci = KernelScientist(
+        llm=ScriptedLLM(seed=SEED),
+        backend=EvalPool.of(_BrokenService(), retry_policy=NO_WAIT_POLICY),
+        retry_policy=NO_WAIT_POLICY,
+        integrity=Integrity(breaker_failures=2, breaker_cooldown=8))
+    best = sci.run(0)                             # seeds only
+    assert best is None
+    assert [r.status for r in sci.population] == ["failed"] * 3
+    # the seeds were all enqueued while the breaker was still closed, so
+    # all three reached the (dead) platform and tripped it open
+    assert sci.pool.submissions == 3
+    breaker = sci.events.select("breaker")
+    assert any(b.get("transition") == "closed->open" and b.get("name") == "eval"
+               for b in breaker)
+    # every subsequent submission is refused up front: a pre-failed handle,
+    # zero further platform traffic
+    handle = sci._submit_record(codegen.render_source(SEED_MXU, "probe"),
+                                tag="probe")
+    with pytest.raises(CircuitOpenError):
+        handle.result(timeout=5)
+    assert sci.pool.submissions == 3
+    skips = [b for b in sci.events.select("breaker")
+             if b.get("action") == "skip" and b.get("name") == "eval"]
+    assert len(skips) == 1
+
+
+# ---------------------------------------------------------------------------
+# @slow soak: subprocess workers, real poison kills, corrupted timings
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_soak_subprocess_poison_and_corruption_campaign(tmp_path):
+    """The integrity layer under the real failure stack: subprocess
+    workers, ``PoisonService`` hard-killing (``os._exit``) any worker that
+    runs a marked kernel, and 12% content-keyed timing corruption.  The
+    campaign must finish every generation, quarantine the poison kernel
+    after exactly K deaths, and converge to the clean in-process best.
+
+    Artifacts (``events.jsonl`` with the audit/quarantine chronicle) land
+    in ``INTEGRITY_SOAK_DIR`` when set, so CI uploads them on failure."""
+    soak_dir = pathlib.Path(os.environ.get("INTEGRITY_SOAK_DIR",
+                                           tmp_path)).resolve()
+    soak_dir.mkdir(parents=True, exist_ok=True)
+
+    clean = _clean_campaign()
+    target = _poison_target(clean)
+
+    wd = soak_dir / "campaign"
+    service = PoisonService(
+        CorruptTimingService(EvaluationService(seed=SEED, noise=0.0),
+                             seed=CORRUPT_SEED, corrupt_rate=0.12))
+    integ = Integrity(quorum_k=3, quarantine_after=2)
+    sci = KernelScientist(
+        llm=_PoisonLLM(ScriptedLLM(seed=SEED), target.source),
+        backend=EvalPool.of(service, workers=2,
+                            cache=EvalCache(wd / "eval_cache.jsonl"),
+                            retry_policy=NO_WAIT_POLICY,
+                            transport="subprocess"),
+        retry_policy=NO_WAIT_POLICY, workdir=wd, integrity=integ)
+    try:
+        best = sci.run(GENS)
+    finally:
+        sci.pool.close(wait=False)
+
+    assert len(sci.logbook) == GENS
+    quarantined = sci.population.quarantined_records()
+    assert len(quarantined) == 1
+    assert POISON_MARKER in quarantined[0].source
+    assert len(integ.quarantine) == 1
+    # the poison hash cost exactly K real worker processes, no more
+    key = EvalCache.key_of(quarantined[0].source)
+    assert integ.quarantine.deaths(key) == 2
+    deaths = sci.events.select("worker_died")
+    assert len(deaths) >= 2
+    clean_best = clean.population.best()
+    assert best.genome.describe() == clean_best.genome.describe()
+    assert best.score == clean_best.score
+    assert (wd / "events.jsonl").exists()         # the CI post-mortem trail

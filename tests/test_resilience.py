@@ -16,6 +16,7 @@ import pytest
 from repro.core import designer, resilience, selector, writer
 from repro.core.evaluator import EvaluationService
 from repro.core.events import EventLog
+from repro.core.integrity import Integrity
 from repro.core.llm import ScriptedLLM
 from repro.core.population import KernelRecord, Population
 from repro.core.resilience import (
@@ -337,12 +338,18 @@ def test_resume_requires_a_campaign(tmp_path):
 # Fault-injection soak
 # ---------------------------------------------------------------------------
 def test_soak_20pct_faults_completes_10_generations():
+    # >= 20% transient faults AND >= 10% silently corrupted timings: the
+    # retry layer absorbs the former, the integrity auditor (quorum
+    # re-measurement) the latter — the campaign must not abort a single
+    # generation under either failure class
     llm = FlakyLLM(ScriptedLLM(seed=11), seed=13,
                    error_rate=0.10, timeout_rate=0.04, malformed_rate=0.06)
-    service = FlakyService(EvaluationService(seed=11), seed=17,
-                           error_rate=0.20)
+    corrupt = resilience.CorruptTimingService(
+        EvaluationService(seed=11), seed=29, corrupt_rate=0.10)
+    service = FlakyService(corrupt, seed=17, error_rate=0.20)
+    integrity = Integrity(quorum_k=3)
     sci = KernelScientist(llm=llm, service=service,
-                          retry_policy=NO_WAIT_POLICY)
+                          retry_policy=NO_WAIT_POLICY, integrity=integrity)
     best = sci.run(10)
 
     assert len(sci.logbook) == 10             # zero aborted generations
@@ -351,6 +358,8 @@ def test_soak_20pct_faults_completes_10_generations():
     assert best is not None and best.score < float("inf")
     # the campaign really was under fire, and the log shows the recovery work
     assert llm.faults > 0 and service.faults > 0
+    assert corrupt.corruptions > 0            # corrupted verdicts did occur
+    assert integrity.auditor.quorums > 0      # and audits did re-measure
     counts = sci.events.counts()
     assert counts.get("retry", 0) > 0
     traj = [v for _, v in sci.trajectory() if v is not None]
